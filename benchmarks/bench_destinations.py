@@ -1,0 +1,31 @@
+"""Paper §3.3 — mixed-environment destination selection with early exit.
+
+Two scenarios per arch: a loose SLO (stage 1 satisfies it -> GPU/FPGA rungs
+skipped, saving trials) and an unsatisfiable SLO (full ladder climbed, best
+fitness wins).
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import GAConfig, Verifier, select_destination
+from repro.core.destinations import Requirement
+
+
+def run() -> list[str]:
+    lines = ["table,arch,scenario,chosen,stages_run,total_trials,"
+             "early_exit,final_seconds,final_watts"]
+    for arch in ("qwen2-7b", "llama3-405b"):
+        cfg = get_config(arch)
+        for scen, req in (("loose_slo", Requirement(max_seconds=1e9)),
+                          ("tight_slo", Requirement(max_seconds=1e-9))):
+            v = Verifier(cfg, "train_4k", n_chips=256, mode="analytic")
+            sel = select_destination(cfg, "train", v, req,
+                                     GAConfig(population=6, generations=3,
+                                              seed=1))
+            m = sel.chosen.measurement
+            lines.append(
+                f"destination_selection,{arch},{scen},{sel.chosen.name},"
+                f"{len(sel.stages)},{v.n_trials},"
+                f"{'yes' if sel.early_exit else 'no'},"
+                f"{m.seconds:.4f},{m.watts:.0f}")
+    return lines

@@ -1,0 +1,45 @@
+"""Paper §3.1 / Fig. 2 — GA offload search with power-aware fitness.
+
+Table 1: fitness evolution per generation (the GA converging).
+Table 2: the paper's key ablation — time-only fitness (previous papers) vs
+time x power fitness (this paper) on the same verification environment:
+the power-aware search must cut energy at little time cost.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import GAConfig, Verifier, run_ga
+
+
+def run() -> list[str]:
+    lines = ["table,arch,gen,best_fitness,best_seconds,best_watts_chip,"
+             "best_energy_j"]
+    cfg = get_config("qwen2-7b")
+    v = Verifier(cfg, "train_4k", n_chips=256, mode="analytic")
+    res = run_ga(cfg, "train", v, GAConfig(population=10, generations=8,
+                                           seed=0))
+    for h in res.history:
+        lines.append(
+            f"ga_evolution,qwen2-7b,{h['gen']},{h['best_fitness']:.4f},"
+            f"{h['best_seconds']:.4f},{h['best_watts']:.0f},"
+            f"{h['best_energy_j']:.0f}")
+    lines.append(f"ga_evolution,qwen2-7b,best,"
+                 f"{res.best_measurement.fitness():.4f},"
+                 f"{res.best_measurement.seconds:.4f},"
+                 f"{res.best_measurement.watts:.0f},"
+                 f"{res.best_measurement.energy_j:.0f}")
+
+    lines.append("table,arch,fitness_kind,seconds,watts_chip,energy_j,"
+                 "n_trials")
+    for arch in ("qwen2-7b", "stablelm-12b", "moonshot-v1-16b-a3b"):
+        cfg = get_config(arch)
+        for name, (a, b) in (("time_only", (1.0, 0.0)),
+                             ("time_x_power", (0.5, 0.5))):
+            vv = Verifier(cfg, "train_4k", n_chips=256, mode="analytic")
+            r = run_ga(cfg, "train", vv,
+                       GAConfig(population=10, generations=6, seed=7,
+                                alpha=a, beta=b))
+            m = r.best_measurement
+            lines.append(f"ga_power_ablation,{arch},{name},{m.seconds:.4f},"
+                         f"{m.watts:.0f},{m.energy_j:.0f},{r.n_trials}")
+    return lines

@@ -1,0 +1,63 @@
+"""Kernel micro-bench: us/call in interpret mode (CPU functional timing;
+TPU perf comes from the roofline analysis, not these wall-clocks)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.tree.leaves(out)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[str]:
+    k = jax.random.split(jax.random.PRNGKey(0), 8)
+    lines = ["table,kernel,us_per_call,derived"]
+
+    b, s, hq, hkv, d = 1, 256, 4, 2, 64
+    q = jax.random.normal(k[0], (b, s, hq, d), jnp.float32)
+    kk = jax.random.normal(k[1], (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(k[2], (b, s, hkv, d), jnp.float32)
+    us = _time(lambda *a: ops.flash_attention(*a), q, kk, v)
+    fl = 4 * b * s * s * hq * d
+    lines.append(f"kernel_bench,flash_attention,{us:.0f},"
+                 f"flops={fl:.2e}")
+
+    n, m = 4096, 512
+    data = [jax.random.normal(k[i], (m,)) for i in range(3)] + \
+           [jax.random.uniform(k[3], (m,))] + \
+           [jax.random.normal(k[4 + i], (n,)) for i in range(3)]
+    us = _time(lambda *a: ops.mriq(*a), *data)
+    lines.append(f"kernel_bench,mriq,{us:.0f},elems={n*m:.2e}")
+
+    log_a = -jnp.abs(jax.random.normal(k[0], (2, 256, 256))) * 0.1
+    bb = jax.random.normal(k[1], (2, 256, 256))
+    us = _time(lambda *a: ops.rglru(*a), log_a, bb)
+    lines.append(f"kernel_bench,rglru,{us:.0f},elems={2*256*256}")
+
+    x = jax.random.normal(k[2], (1, 256, 4, 16))
+    dt = jax.nn.softplus(jax.random.normal(k[3], (1, 256, 4)))
+    A = -jnp.exp(jax.random.normal(k[4], (4,)) * 0.2)
+    Bm = jax.random.normal(k[5], (1, 256, 16))
+    Cm = jax.random.normal(k[6], (1, 256, 16))
+    us = _time(lambda *a: ops.ssd(*a), x, dt, A, Bm, Cm)
+    lines.append(f"kernel_bench,ssd,{us:.0f},chunk=128")
+
+    xx = jax.random.normal(k[7], (256, 64))
+    wi = jax.random.normal(k[0], (64, 128)) * 0.1
+    wg = jax.random.normal(k[1], (64, 128)) * 0.1
+    wo = jax.random.normal(k[2], (128, 64)) * 0.1
+    us = _time(lambda *a: ops.fused_swiglu(*a), xx, wi, wg, wo)
+    lines.append(f"kernel_bench,fused_swiglu,{us:.0f},"
+                 f"flops={6*256*64*128:.2e}")
+    return lines

@@ -1,0 +1,39 @@
+"""Paper §3.2 / Fig. 3 — FPGA-style candidate narrowing funnel.
+
+For each arch: sites considered -> rejected (with the static-analysis
+reason) -> measured patterns, plus the combination round (paper's second
+measurement).  MRI-Q's own funnel (16 loops -> 4 patterns) is reproduced in
+examples/mriq_offload.py.
+"""
+from __future__ import annotations
+
+from repro.configs import SHAPES, get_config
+from repro.core import Verifier, narrow_candidates
+from repro.core.plan import PlanGenome
+
+
+def run() -> list[str]:
+    lines = ["table,arch,shape,sites,rejected,patterns,best_pattern,"
+             "best_fitness,baseline_fitness"]
+    for arch in ("llama3-405b", "mamba2-1.3b", "recurrentgemma-9b",
+                 "moonshot-v1-16b-a3b"):
+        cfg = get_config(arch)
+        shape = SHAPES["train_4k"]
+        rep = narrow_candidates(cfg, shape)
+        v = Verifier(cfg, "train_4k", n_chips=256, mode="analytic")
+        base = v.measure(PlanGenome.from_plan(cfg, "train", cfg.plan))
+        best_name, best_fit = "none", base.fitness()
+        import dataclasses
+        for cand in rep.candidates:
+            plan = dataclasses.replace(cfg.plan, **cand.overrides)
+            m = v.measure_plan(plan, "train")
+            if m.fitness() > best_fit:
+                best_name, best_fit = cand.name, m.fitness()
+        lines.append(
+            f"narrowing_funnel,{arch},train_4k,{len(rep.considered)},"
+            f"{len(rep.rejected)},{len(rep.candidates)},{best_name},"
+            f"{best_fit:.4f},{base.fitness():.4f}")
+        for site, reason in rep.rejected:
+            lines.append(f"narrowing_reject,{arch},train_4k,{site},"
+                         f"\"{reason[:70]}\",,,,")
+    return lines

@@ -1,0 +1,20 @@
+"""§Roofline — the three-term table over all dry-run cells (single-pod)."""
+from __future__ import annotations
+
+from repro.core.roofline import load_rows
+
+
+def run() -> list[str]:
+    lines = ["table,arch,shape,dominant,t_compute_s,t_memory_s,"
+             "t_collective_s,roofline_fraction,useful_ratio,watts_chip,"
+             "status"]
+    for r in load_rows():
+        if r.status != "OK":
+            lines.append(f"roofline,{r.arch},{r.shape},,,,,,,,{r.status}")
+            continue
+        lines.append(
+            f"roofline,{r.arch},{r.shape},{r.dominant},"
+            f"{r.t_compute:.5f},{r.t_memory:.5f},{r.t_collective:.5f},"
+            f"{r.roofline_fraction:.3f},{r.useful_ratio:.3f},"
+            f"{r.watts_per_chip:.0f},OK")
+    return lines

@@ -1,0 +1,32 @@
+"""Paper §3.1 transfer batching — collective census + fusible groups.
+
+Reads the dry-run artifacts: per (arch, shape) the collective op counts,
+payload bytes, and the batching report (same-shape collectives repeated
+>= 4x = the per-layer transfers the paper batches at the outer nest).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def run() -> list[str]:
+    lines = ["table,arch,shape,coll_ops,coll_bytes_per_dev,fusible_ops,"
+             "fusible_bytes,top_group"]
+    for p in sorted(ART.glob("*__pod16x16.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") != "OK":
+            continue
+        c = rec["collectives"]
+        b = rec.get("batching", {})
+        top = ""
+        if b.get("groups"):
+            g = b["groups"][0]
+            top = f"{g['kind']}x{g['count']}"
+        lines.append(
+            f"transfer_census,{rec['arch']},{rec['shape']},"
+            f"{c.get('total_count', 0)},{c['total_bytes']},"
+            f"{b.get('fusible_ops', 0)},{b.get('fusible_bytes', 0)},{top}")
+    return lines

@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only mriq,ga,...]
+
+  bench_mriq         — §4.2/Fig.5: MRI-Q time & Watt*seconds, CPU vs offload
+  bench_ga           — §3.1/Fig.2: GA evolution + power-fitness ablation
+  bench_narrowing    — §3.2/Fig.3: candidate narrowing funnel
+  bench_destinations — §3.3: mixed-destination selection + early exit
+  bench_transfer     — §3.1: collective census / transfer batching
+  bench_roofline     — §Roofline: three-term table from the dry-run
+  bench_kernels      — Pallas kernel micro-bench (interpret mode)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_destinations, bench_ga, bench_kernels,
+                        bench_mriq, bench_narrowing, bench_roofline,
+                        bench_transfer)
+
+SUITES = {
+    "mriq": bench_mriq,
+    "ga": bench_ga,
+    "narrowing": bench_narrowing,
+    "destinations": bench_destinations,
+    "transfer": bench_transfer,
+    "roofline": bench_roofline,
+    "kernels": bench_kernels,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    args = ap.parse_args()
+    names = (args.only.split(",") if args.only else list(SUITES))
+
+    failures = 0
+    for name in names:
+        mod = SUITES[name]
+        print(f"\n# === {name} ({mod.__name__}) ===", flush=True)
+        t0 = time.time()
+        try:
+            for line in mod.run():
+                print(line, flush=True)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # report and continue
+            failures += 1
+            print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

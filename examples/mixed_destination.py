@@ -1,0 +1,39 @@
+"""Paper §3.3: mixed-environment destination selection with early exit.
+
+    PYTHONPATH=src python examples/mixed_destination.py
+
+Climbs the destination ladder (xla_default -> xla_tuned -> pallas) for
+llama3-405b decode under two SLOs, showing the early exit skipping the
+expensive rung when the requirement is already met.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import get_config                      # noqa: E402
+from repro.core import GAConfig, Verifier, select_destination  # noqa: E402
+from repro.core.destinations import Requirement           # noqa: E402
+
+
+def main() -> None:
+    cfg = get_config("llama3-405b")
+    for label, req in (
+        ("loose SLO (200 ms/token)", Requirement(max_seconds=0.2)),
+        ("tight SLO (1 ms/token)", Requirement(max_seconds=1e-3)),
+    ):
+        print(f"\n=== decode_32k under {label} ===")
+        v = Verifier(cfg, "decode_32k", n_chips=256, mode="analytic")
+        sel = select_destination(cfg, "decode", v, req,
+                                 GAConfig(population=6, generations=3,
+                                          seed=0), log=print)
+        m = sel.chosen.measurement
+        print(f"chosen destination: {sel.chosen.name}  "
+              f"t={m.seconds*1e3:.2f} ms  {m.watts:.0f} W/chip  "
+              f"trials={v.n_trials}")
+        if sel.early_exit:
+            print(f"early exit: {sel.early_exit}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: power-aware automatic offload search on a small LM.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Builds qwen2-7b's execution-plan search space (the paper's genome).
+2. Runs the GA against the analytic verification environment with the
+   paper's (time)^-1/2 (power)^-1/2 fitness.
+3. Prints the chosen plan vs the incumbent: seconds, watts, Watt*seconds.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import get_config                      # noqa: E402
+from repro.core import GAConfig, Verifier, run_ga         # noqa: E402
+from repro.core.plan import PlanGenome                    # noqa: E402
+
+
+def main() -> None:
+    cfg = get_config("qwen2-7b")
+    verifier = Verifier(cfg, "train_4k", n_chips=256, mode="analytic")
+
+    incumbent = PlanGenome.from_plan(cfg, "train", cfg.plan)
+    m0 = verifier.measure(incumbent)
+    print(f"incumbent plan: t={m0.seconds*1e3:.1f} ms  "
+          f"{m0.watts:.0f} W/chip  {m0.energy_j:.0f} J/step")
+
+    res = run_ga(cfg, "train", verifier,
+                 GAConfig(population=10, generations=8, seed=0),
+                 log=print)
+    m = res.best_measurement
+    print("\n== GA result ==")
+    print(res.summary())
+    print(f"\nspeedup: {m0.seconds/m.seconds:.2f}x   "
+          f"energy: {m0.energy_j:.0f} J -> {m.energy_j:.0f} J "
+          f"({m0.energy_j/m.energy_j:.2f}x lower)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Atomic checkpointing with integrity hashes and elastic reshard-on-load.
+
+Layout:  <dir>/step_<k>/
+           arrays.npz          flattened pytree leaves (key = path)
+           manifest.json       treedef, shapes, dtypes, sha256 per leaf, meta
+           COMMITTED           written last; absence = torn checkpoint
+
+Restore re-shards onto whatever mesh/sharding the *restoring* job uses
+(``jax.device_put`` against the target sharding tree) — a checkpoint written
+on a 512-chip mesh restores onto 256 chips or 1 CPU device unchanged
+(elastic scaling).  Async save runs serialization in a worker thread off the
+critical path.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any,
+         meta: Optional[dict] = None) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    flat = _flatten(tree)
+    np.savez(tmp / "arrays.npz", **flat)
+    manifest = {
+        "step": step,
+        "meta": meta or {},
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                       "sha256": hashlib.sha256(v.tobytes()).hexdigest()}
+                   for k, v in flat.items()},
+    }
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    (tmp / "COMMITTED").write_text("ok")
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                      # atomic publish
+    return final
+
+
+class AsyncSaver:
+    """Runs `save` off the training thread; at most one in flight."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+        self.last_path: Optional[Path] = None
+
+    def save(self, ckpt_dir, step, tree, meta=None):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # snapshot now
+
+        def work():
+            self.last_path = save(ckpt_dir, step, host_tree, meta)
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for p in ckpt_dir.glob("step_*"):
+        if (p / "COMMITTED").exists():
+            steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str | Path, step: int, like: Any,
+            shardings: Any = None, verify: bool = True) -> tuple[Any, dict]:
+    """Restore into the structure of `like`, optionally resharding.
+
+    `like` supplies the treedef (its leaf values are ignored).  `shardings`
+    (same structure, NamedSharding leaves) places each leaf on the restoring
+    job's own mesh — elastic rescale happens here.
+    """
+    path = Path(ckpt_dir) / f"step_{step:08d}"
+    if not (path / "COMMITTED").exists():
+        raise FileNotFoundError(f"no committed checkpoint at {path}")
+    manifest = json.loads((path / "manifest.json").read_text())
+    data = np.load(path / "arrays.npz")
+
+    leaves_meta = manifest["leaves"]
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out_leaves = []
+    flat_sh = (jax.tree.leaves(shardings,
+                               is_leaf=lambda x: hasattr(x, "mesh"))
+               if shardings is not None else [None] * len(paths))
+    for (path_keys, leaf), sh in zip(paths, flat_sh):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path_keys)
+        arr = data[key]
+        if verify:
+            digest = hashlib.sha256(arr.tobytes()).hexdigest()
+            if digest != leaves_meta[key]["sha256"]:
+                raise IOError(f"integrity check failed for {key}")
+        if sh is not None:
+            out_leaves.append(jax.device_put(arr, sh))
+        else:
+            out_leaves.append(jax.numpy.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(treedef, out_leaves)
+    return tree, manifest["meta"]

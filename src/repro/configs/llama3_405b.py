@@ -1,0 +1,41 @@
+"""Llama3-405B [dense] — GQA, 128k vocab.
+
+126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256 [arXiv:2407.21783].
+Memory-critical on a 256-chip v5e pod: adafactor (factored 2nd moments),
+full remat, sequence-sharded residual stream, 16-way microbatching.
+"""
+from repro.configs.base import (ArchConfig, PlanConfig, register,
+                                FULL_ATTENTION_SKIPS)
+
+FULL = ArchConfig(
+    name="llama3-405b",
+    family="dense",
+    n_layers=126,
+    d_model=16384,
+    n_heads=128,
+    n_kv_heads=8,
+    d_ff=53248,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    optimizer="adafactor",
+    plan=PlanConfig(remat="full", microbatches=16, seq_shard=True,
+                    fsdp=True, attn_chunk=512,
+                    param_dtype="bfloat16", accum_dtype="bfloat16"),
+    skip_shapes=dict(FULL_ATTENTION_SKIPS),
+)
+
+REDUCED = ArchConfig(
+    name="llama3-405b",
+    family="dense",
+    n_layers=4,
+    d_model=64,
+    n_heads=8,
+    n_kv_heads=2,
+    d_ff=192,
+    vocab_size=128,
+    optimizer="adafactor",
+    plan=PlanConfig(remat="none", attn_chunk=32, microbatches=2),
+    skip_shapes=dict(FULL_ATTENTION_SKIPS),
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,46 @@
+"""Mamba2-1.3B [ssm] — SSD (state-space duality), attention-free.
+
+48L d_model=2048 vocab=50280 ssm_state=128 [arXiv:2405.21060].
+Constant-size decode state => runs long_500k.  Attention-related offload
+genes are inapplicable (DESIGN.md §4) — the plan space simply contains no
+attention sites for this arch.
+"""
+from repro.configs.base import ArchConfig, PlanConfig, register
+
+FULL = ArchConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_headdim=64,
+    ssm_conv=4,
+    ssm_chunk=256,
+    tie_embeddings=True,
+    plan=PlanConfig(remat="full", microbatches=4),
+)
+
+REDUCED = ArchConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=3,
+    d_model=64,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab_size=128,
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_headdim=16,
+    ssm_conv=4,
+    ssm_chunk=16,
+    tie_embeddings=True,
+    plan=PlanConfig(remat="none"),
+)
+
+register(FULL, REDUCED)

@@ -1,0 +1,49 @@
+"""Beyond-paper optimized plans per (arch, shape-kind) — §Perf fleet sweep.
+
+Derived from the three hillclimbed cells (EXPERIMENTS.md §Perf) and napkin
+math over the roofline table, then validated by re-lowering each cell
+(scripts/optimize_all.py):
+
+  * small archs whose bf16 weights fit one chip -> pure DP (use_tp=False):
+    kills the dominant per-layer TP collectives (cell A: 3.6x);
+  * everything -> async collective overlap (+int8 EF gradient wire for
+    trains);
+  * decode cells -> int8 KV cache (cell B: 3.6x at 0.7% rel err);
+  * compute-bound big archs -> cheaper remat where the stash fits.
+
+Memory feasibility gate for use_tp=False: params(bf16 compute copy) +
+ZeRO'd states + stash must fit 16 GiB -> applies to <=7B-ish dense/MoE/SSM
+archs only (qwen2-7b, mamba2-1.3b, granite-moe-1b, hubert-xlarge);
+12B-and-up keep TP.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, PlanConfig, get_config
+
+# archs whose bf16 weights (+states) fit a single v5e chip AND whose
+# train step tolerates losing the model axis.  MoE trains are excluded:
+# without EP the (experts, capacity, d) dispatch buffer un-shards and its
+# scatter becomes a full-buffer all-reduce (observed 329 GiB/chip —
+# EXPERIMENTS.md §Perf fleet sweep); MoE decode is fine (tiny buffers).
+_PURE_DP = {"qwen2-7b", "mamba2-1.3b", "hubert-xlarge"}
+_PURE_DP_DECODE = {"granite-moe-1b-a400m", "mamba2-1.3b"}
+
+
+def optimized_plan(arch: str, kind: str) -> PlanConfig:
+    """Best-known plan for (arch, shape-kind); baseline plan + §Perf genes."""
+    cfg = get_config(arch)
+    plan = cfg.plan.replace(overlap_collectives=True)
+    if kind == "train":
+        plan = plan.replace(grad_compress="int8_ef", fused_grad_reduce=True)
+        if arch in _PURE_DP:
+            plan = plan.replace(use_tp=False, microbatches=1, fsdp=True)
+        if arch == "qwen2-7b":
+            # cell C1: the GA's pick — remat off fits under pure DP
+            plan = plan.replace(remat="none", attn_chunk=2048, fsdp=False)
+    elif kind in ("prefill", "decode"):
+        if cfg.n_heads and cfg.n_kv_heads:
+            plan = plan.replace(kv_cache_dtype="int8")
+        if kind == "decode" and arch in _PURE_DP_DECODE:
+            # tiny models: even the replicated weight read is cheap
+            plan = plan.replace(use_tp=False)
+    return plan

@@ -1,0 +1,16 @@
+"""The paper's contribution: power-aware automatic offload search.
+
+Yamato (2021) searches discrete offload decisions (which loop goes to which
+device) with evolutionary computation against measured time x power fitness,
+narrowing expensive-to-evaluate candidates (FPGA) with static analysis first.
+Here the decision space is the execution plan of a JAX program on a TPU pod
+(kernels, shardings, remat, collectives) and the "verification environment"
+is the compile-only dry-run + analytic time/energy models.
+"""
+from repro.core.power import PowerModel, V5E  # noqa: F401
+from repro.core.fitness import fitness, TIMEOUT_SECONDS, TIMEOUT_PENALTY_S  # noqa: F401
+from repro.core.plan import PlanGenome, GENES  # noqa: F401
+from repro.core.ga import GAConfig, run_ga  # noqa: F401
+from repro.core.verifier import Verifier, Measurement  # noqa: F401
+from repro.core.narrowing import narrow_candidates  # noqa: F401
+from repro.core.destinations import select_destination, Destination  # noqa: F401

@@ -1,0 +1,245 @@
+"""The full environment-adaptive flow (paper Fig. 1, Steps 1-7).
+
+The paper's architecture is a seven-step pipeline around the verification
+environment; this module wires the framework's pieces into that exact flow:
+
+  Step 1  Code analysis                -> site census (intensity/loop counts)
+  Step 2  Offloadable-part extraction  -> plan genome space for the arch
+  Step 3  Search for suitable parts    -> staged destination search
+                                          (GA + narrowing, §3.1-3.3)
+  Step 4  Resource-amount adjustment   -> chip-slice sizing under the §3.3
+                                          data-center cost model
+  Step 5  Placement-location adjustment-> single-pod vs multi-pod mesh
+  Step 6  Execution-file placement +   -> dry-run lowering of the final
+          operation verification          (plan, slice, mesh) + smoke run
+  Step 7  In-operation reconfiguration -> runtime monitor that re-searches
+                                          when the measured step time drifts
+
+Steps 4-5 use the paper's cost framing: "initial cost such as hardware...
+is 1/3 of the total cost, the operation cost such as power and maintenance
+is 1/3" — so the objective blends chip-hours and energy, with weights the
+operator can change (§3.3: "the evaluation formula needs to be set
+differently for each business operator").
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.configs.base import ArchConfig, PlanConfig, SHAPES
+from repro.core.destinations import Requirement, SelectionLog, \
+    select_destination
+from repro.core.ga import GAConfig
+from repro.core.intensity import site_census
+from repro.core.narrowing import narrow_candidates
+from repro.core.plan import PlanGenome
+from repro.core.verifier import Measurement, Verifier
+
+
+# ---------------------------------------------------------------------------
+# Step 4 — resource-amount adjustment (§3.3 cost structure)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CostModel:
+    """Per-step cost in arbitrary currency units.
+
+    hw_rate: chip-seconds price (amortized hardware+development, the
+    paper's 'initial cost' third); energy_rate: per-joule price (the
+    'operation cost' third).  Defaults make the two thirds comparable for
+    a v5e-class chip (~$2/chip-hour hw, ~$0.12/kWh energy).
+    """
+    hw_rate: float = 2.0 / 3600.0          # per chip-second
+    energy_rate: float = 0.12 / 3.6e6      # per joule
+    fixed_rate: float = 0.0                # 'other cost' third (per step)
+
+    def step_cost(self, m: Measurement, chips: int) -> float:
+        return (self.hw_rate * chips * m.seconds
+                + self.energy_rate * m.energy_j
+                + self.fixed_rate)
+
+
+@dataclass
+class SliceChoice:
+    chips: int
+    measurement: Measurement
+    cost: float
+    tokens_per_cost: float
+
+
+def adjust_resources(cfg: ArchConfig, shape_name: str, plan: PlanConfig,
+                     slices: tuple[int, ...] = (64, 128, 256, 512),
+                     cost: CostModel = CostModel(),
+                     requirement: Optional[Requirement] = None,
+                     verifier_factory: Optional[Callable] = None
+                     ) -> list[SliceChoice]:
+    """Measure the plan on several slice sizes; rank by cost efficiency.
+
+    Returns choices sorted best-first (satisfying the requirement first,
+    then lowest cost per step).
+    """
+    shape = SHAPES[shape_name]
+    out: list[SliceChoice] = []
+    for chips in slices:
+        v = (verifier_factory(chips) if verifier_factory
+             else Verifier(cfg, shape_name, n_chips=chips, mode="analytic"))
+        m = v.measure_plan(plan, shape.kind)
+        c = cost.step_cost(m, chips)
+        tokens = shape.tokens if shape.kind != "decode" else \
+            shape.global_batch
+        out.append(SliceChoice(chips, m, c,
+                               tokens / c if c > 0 else 0.0))
+
+    def key(s: SliceChoice):
+        ok = s.measurement.ok and (requirement is None
+                                   or requirement.satisfied(s.measurement))
+        return (not ok, s.cost)
+
+    out.sort(key=key)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Step 5 — placement-location adjustment
+# ---------------------------------------------------------------------------
+
+def adjust_placement(chips: int) -> dict:
+    """Map the chosen slice onto pods: TP stays ICI-local; DP spans pods."""
+    per_pod = 256
+    pods = max(1, -(-chips // per_pod))
+    return {"pods": pods,
+            "mesh": ("pod", "data", "model") if pods > 1
+            else ("data", "model"),
+            "multi_pod": pods > 1,
+            "note": "TP inside a pod (ICI); DP across pods (DCN-tolerant)"}
+
+
+# ---------------------------------------------------------------------------
+# Step 7 — in-operation reconfiguration
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ReconfigPolicy:
+    degrade_factor: float = 1.5     # re-search when step time drifts 1.5x
+    window: int = 16                # rolling baseline
+    cooldown_steps: int = 64        # min distance between reconfigs
+
+
+@dataclass
+class Reconfigurator:
+    """Runtime monitor: watches measured step seconds; when the rolling
+    median degrades past the policy threshold (data drift, failing chip,
+    thermal throttle...), re-runs the offload search and emits a new plan.
+
+    The caller swaps the plan at a checkpoint boundary (re-jit + restore),
+    which the FT driver already supports — reconfiguration is therefore a
+    checkpointed plan migration, not a live mutation.
+    """
+    cfg: ArchConfig
+    shape_name: str
+    policy: ReconfigPolicy = field(default_factory=ReconfigPolicy)
+    ga: GAConfig = field(default_factory=lambda: GAConfig(population=6,
+                                                          generations=3))
+    verifier_factory: Optional[Callable] = None
+    baseline: list = field(default_factory=list)
+    events: list = field(default_factory=list)
+    _last_reconfig: int = -10**9
+
+    def observe(self, step: int, seconds: float,
+                current_plan: PlanConfig) -> Optional[PlanConfig]:
+        """Returns a new plan when reconfiguration triggers, else None."""
+        med = (statistics.median(self.baseline) if self.baseline else None)
+        self.baseline.append(seconds)
+        if len(self.baseline) > self.policy.window:
+            self.baseline.pop(0)
+        if med is None or seconds <= self.policy.degrade_factor * med:
+            return None
+        if step - self._last_reconfig < self.policy.cooldown_steps:
+            return None
+        self._last_reconfig = step
+        v = (self.verifier_factory() if self.verifier_factory
+             else Verifier(self.cfg, self.shape_name, n_chips=256,
+                           mode="analytic"))
+        shape = SHAPES[self.shape_name]
+        sel = select_destination(self.cfg, shape.kind, v,
+                                 Requirement(max_seconds=med), self.ga)
+        new_plan = sel.chosen.genome.to_plan()
+        self.events.append({"step": step, "seconds": seconds,
+                            "median": med,
+                            "new_plan": new_plan.describe(),
+                            "stage": sel.chosen.name})
+        self.baseline.clear()
+        return new_plan
+
+
+# ---------------------------------------------------------------------------
+# The whole flow (Fig. 1)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class AdaptationReport:
+    census: list = field(default_factory=list)          # step 1
+    genes: list = field(default_factory=list)           # step 2
+    selection: Optional[SelectionLog] = None            # step 3
+    slices: list = field(default_factory=list)          # step 4
+    placement: dict = field(default_factory=dict)       # step 5
+    verified: Optional[dict] = None                     # step 6
+    reconfigurator: Optional[Reconfigurator] = None     # step 7
+    plan: Optional[PlanConfig] = None
+    chips: int = 0
+
+    def summary(self) -> str:
+        best = self.slices[0] if self.slices else None
+        return (f"sites={len(self.census)} genes={len(self.genes)} "
+                f"stage={self.selection.chosen.name if self.selection and self.selection.chosen else '?'} "
+                f"chips={self.chips} pods={self.placement.get('pods')} "
+                f"t={best.measurement.seconds*1e3:.1f}ms "
+                f"cost/step={best.cost:.4f}" if best else "incomplete")
+
+
+def adapt(cfg: ArchConfig, shape_name: str,
+          requirement: Optional[Requirement] = None,
+          cost: CostModel = CostModel(),
+          ga: GAConfig = GAConfig(population=8, generations=4),
+          slices: tuple[int, ...] = (64, 128, 256, 512),
+          verify: bool = False,
+          log: Optional[Callable[[str], None]] = None) -> AdaptationReport:
+    """Run Steps 1-7 for (arch, shape); Step 6's full dry-run only when
+    ``verify=True`` (spawns the 512-device lowering)."""
+    rep = AdaptationReport()
+    shape = SHAPES[shape_name]
+
+    # 1: code analysis
+    rep.census = [dataclasses.asdict(s) for s in site_census(cfg, shape)]
+    if log:
+        log(f"step 1: {len(rep.census)} sites")
+    # 2: offloadable-part extraction
+    rep.genes = PlanGenome.gene_names(cfg, shape.kind)
+    if log:
+        log(f"step 2: genes = {rep.genes}")
+    # 3: search (staged destinations incl. GA + narrowing)
+    v = Verifier(cfg, shape_name, n_chips=256, mode="analytic")
+    rep.selection = select_destination(cfg, shape.kind, v, requirement, ga,
+                                       log=log)
+    rep.plan = rep.selection.chosen.genome.to_plan()
+    # 4: resource-amount adjustment
+    rep.slices = adjust_resources(cfg, shape_name, rep.plan, slices, cost,
+                                  requirement)
+    rep.chips = rep.slices[0].chips
+    if log:
+        log("step 4: " + ", ".join(
+            f"{s.chips}ch->{s.cost:.4f}/step" for s in rep.slices))
+    # 5: placement
+    rep.placement = adjust_placement(rep.chips)
+    # 6: verification (optional heavy dry-run)
+    if verify:
+        from repro.launch.dryrun import run_cell
+        rec = run_cell(cfg.name, shape_name,
+                       multi_pod=rep.placement["multi_pod"],
+                       plan=rep.plan, tag="_adapt")
+        rep.verified = {"status": rec["status"]}
+    # 7: hand back the runtime reconfigurator
+    rep.reconfigurator = Reconfigurator(cfg, shape_name)
+    return rep

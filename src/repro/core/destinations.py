@@ -1,0 +1,137 @@
+"""Mixed-environment offload-destination selection (paper §3.3).
+
+The paper orders verification cheapest-first — many-core CPU, then GPU, then
+FPGA — and stops as soon as a pattern satisfies the user requirement, because
+FPGA verification is expensive.  The TPU-pod ladder with the same cost
+asymmetry:
+
+  1. xla_default   — the incumbent plan as-is (one measurement)
+  2. xla_tuned     — GA over stock-XLA genes only (sharding/remat/chunk):
+                     cheap trials, no kernel builds
+  3. pallas        — narrowing (§3.2) + kernel-offload patterns: expensive
+
+The final selection uses the same (time)^-1/2 (power)^-1/2 value.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.configs.base import ArchConfig
+from repro.core.fitness import fitness
+from repro.core.ga import GAConfig, run_ga
+from repro.core.narrowing import narrow_candidates
+from repro.core.plan import PlanGenome
+from repro.core.verifier import Measurement, Verifier
+
+
+@dataclass
+class Requirement:
+    """User SLO: a pattern 'sufficiently satisfies' it (paper wording)."""
+    max_seconds: Optional[float] = None
+    max_watts: Optional[float] = None
+
+    def satisfied(self, m: Measurement) -> bool:
+        if not m.ok:
+            return False
+        if self.max_seconds is not None and m.seconds > self.max_seconds:
+            return False
+        if self.max_watts is not None and m.watts > self.max_watts:
+            return False
+        return True
+
+
+@dataclass
+class Destination:
+    name: str
+    genome: PlanGenome
+    measurement: Measurement
+    stage: int
+
+
+@dataclass
+class SelectionLog:
+    stages: list = field(default_factory=list)
+    early_exit: Optional[str] = None
+    chosen: Optional[Destination] = None
+
+
+def _pallas_off(genome: PlanGenome) -> PlanGenome:
+    """Clamp all kernel-destination genes to stock XLA."""
+    alleles = dict(genome.alleles)
+    from repro.core.plan import GENES
+    for g in ("attn_impl", "mlp_impl", "ssm_impl", "rglru_impl"):
+        if g in alleles:
+            vals = GENES[g][0]
+            cur = vals[alleles[g]]
+            if cur == "pallas":
+                alleles[g] = vals.index("xla_chunked"
+                                        if "xla_chunked" in vals else "xla")
+    return PlanGenome(genome.cfg, genome.kind, alleles)
+
+
+def select_destination(cfg: ArchConfig, kind: str, verifier: Verifier,
+                       requirement: Optional[Requirement] = None,
+                       ga: GAConfig = GAConfig(),
+                       log=None) -> SelectionLog:
+    out = SelectionLog()
+    req = requirement or Requirement()
+
+    def note(msg):
+        if log:
+            log(msg)
+
+    # --- stage 1: incumbent plan, one cheap measurement ---------------------
+    inc = PlanGenome.from_plan(cfg, kind, cfg.plan)
+    inc = _pallas_off(inc)
+    m1 = verifier.measure(inc)
+    out.stages.append({"stage": "xla_default", "fitness": m1.fitness(),
+                       "seconds": m1.seconds, "watts": m1.watts,
+                       "trials": 1})
+    note(f"stage 1 xla_default: t={m1.seconds*1e3:.2f}ms W={m1.watts:.0f}")
+    best = Destination("xla_default", inc, m1, 1)
+    if req.satisfied(m1):
+        out.early_exit = "xla_default satisfied the requirement"
+        out.chosen = best
+        return out
+
+    # --- stage 2: GA over stock-XLA genes (no kernel builds) ----------------
+    t0 = verifier.n_trials
+    res = run_ga(cfg, kind, verifier, ga)
+    g2 = _pallas_off(res.best)
+    m2 = verifier.measure(g2)
+    out.stages.append({"stage": "xla_tuned", "fitness": m2.fitness(),
+                       "seconds": m2.seconds, "watts": m2.watts,
+                       "trials": verifier.n_trials - t0})
+    note(f"stage 2 xla_tuned:   t={m2.seconds*1e3:.2f}ms W={m2.watts:.0f}")
+    if m2.fitness() > best.measurement.fitness():
+        best = Destination("xla_tuned", g2, m2, 2)
+    if req.satisfied(m2):
+        out.early_exit = "xla_tuned satisfied the requirement (skipping pallas)"
+        out.chosen = best
+        return out
+
+    # --- stage 3: narrowing + Pallas kernel offload patterns ----------------
+    t0 = verifier.n_trials
+    rep = narrow_candidates(cfg, verifier.shape, best.genome.to_plan())
+    note(f"stage 3 narrowing:   {rep.funnel()}")
+    for cand in rep.candidates:
+        alleles = dict(best.genome.alleles)
+        from repro.core.plan import GENES
+        genome = best.genome
+        plan = genome.to_plan()
+        import dataclasses
+        plan = dataclasses.replace(plan, **cand.overrides)
+        g3 = PlanGenome.from_plan(cfg, kind, plan)
+        m3 = verifier.measure(g3)
+        note(f"  pallas[{cand.name}]: t={m3.seconds*1e3:.2f}ms "
+             f"W={m3.watts:.0f} fit={m3.fitness():.4f}")
+        if m3.fitness() > best.measurement.fitness():
+            best = Destination(f"pallas[{cand.name}]", g3, m3, 3)
+    out.stages.append({"stage": "pallas", "fitness":
+                       best.measurement.fitness(),
+                       "seconds": best.measurement.seconds,
+                       "watts": best.measurement.watts,
+                       "trials": verifier.n_trials - t0})
+    out.chosen = best
+    return out

@@ -1,0 +1,110 @@
+"""FPGA-style candidate narrowing (paper §3.2).
+
+Building a Pallas kernel variant (and compiling the 512-device program that
+uses it) is the expensive trial — the analogue of the hours-long FPGA
+place-and-route.  So, before measuring anything, narrow the offload
+candidates exactly the way the paper does:
+
+  1. arithmetic-intensity analysis (ROSE)       -> SiteStats.intensity
+  2. loop counts / profiling (gcov, gprof)      -> SiteStats.count, flops share
+  3. resource pre-check (FF/LUT mid-compile)    -> VMEM working-set fit
+  4. keep the top-k patterns, measure them, then
+  5. combine the best singles and re-measure (paper's second round).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.configs.base import ArchConfig, ShapeSpec, PlanConfig
+from repro.core.intensity import SiteStats, site_census
+
+VMEM_BYTES = 16 * 2**20          # v5e VMEM per core
+MIN_FLOPS_SHARE = 0.01           # "loop statements with a large number of loops"
+MIN_INTENSITY = 8.0              # below this the site is bandwidth-bound anyway
+
+#: site -> the plan gene that offloads it to the Pallas destination
+SITE_GENE = {"attn": "attn_impl", "mlp": "mlp_impl", "ssm": "ssm_impl",
+             "rglru": "rglru_impl"}
+
+
+@dataclass
+class Candidate:
+    name: str                          # e.g. 'attn', 'attn+mlp'
+    overrides: dict                    # plan gene overrides
+    rationale: dict = field(default_factory=dict)
+
+
+@dataclass
+class NarrowingReport:
+    considered: list = field(default_factory=list)    # all sites w/ stats
+    rejected: list = field(default_factory=list)      # (site, reason)
+    candidates: list = field(default_factory=list)    # surviving Candidates
+
+    def funnel(self) -> str:
+        return (f"{len(self.considered)} sites -> "
+                f"{len(self.candidates)} measurement patterns "
+                f"({len(self.rejected)} rejected by static analysis)")
+
+
+def _vmem_fit(site: SiteStats) -> bool:
+    return site.vmem_working_set <= VMEM_BYTES
+
+
+def narrow_candidates(cfg: ArchConfig, shape: ShapeSpec,
+                      plan: PlanConfig | None = None,
+                      top_k: int = 4,
+                      combine: bool = True) -> NarrowingReport:
+    plan = plan or cfg.plan
+    sites = site_census(cfg, shape, plan)
+    total_flops = sum(s.flops for s in sites) or 1.0
+    rep = NarrowingReport()
+
+    scored: list[tuple[float, SiteStats]] = []
+    for s in sites:
+        rep.considered.append({
+            "site": s.name, "flops": s.flops, "intensity": s.intensity,
+            "count": s.count, "flops_share": s.flops / total_flops,
+            "vmem_ws": s.vmem_working_set,
+        })
+        if s.name not in SITE_GENE:
+            rep.rejected.append((s.name, "no Pallas destination for site"))
+            continue
+        if s.flops / total_flops < MIN_FLOPS_SHARE:
+            rep.rejected.append(
+                (s.name, f"flops share {s.flops/total_flops:.1%} < "
+                         f"{MIN_FLOPS_SHARE:.0%} (loop-count filter)"))
+            continue
+        if s.intensity < MIN_INTENSITY:
+            rep.rejected.append(
+                (s.name, f"arithmetic intensity {s.intensity:.1f} < "
+                         f"{MIN_INTENSITY} (bandwidth-bound)"))
+            continue
+        if not _vmem_fit(s):
+            rep.rejected.append(
+                (s.name, f"VMEM working set {s.vmem_working_set/2**20:.1f} "
+                         f"MiB > {VMEM_BYTES/2**20:.0f} MiB "
+                         f"(resource pre-check)"))
+            continue
+        scored.append((s.flops / total_flops * max(s.intensity, 1.0), s))
+
+    scored.sort(key=lambda x: -x[0])
+    singles = scored[:top_k]
+    for score, s in singles:
+        rep.candidates.append(Candidate(
+            name=s.name,
+            overrides={SITE_GENE[s.name]: "pallas"},
+            rationale={"score": score, "intensity": s.intensity,
+                       "flops_share": s.flops / total_flops}))
+
+    # paper §3.2: "for a single-loop statement that can be further speeded
+    # up, a pattern of the combination is also created"
+    if combine and len(singles) >= 2:
+        for i in range(min(2, len(singles))):
+            for j in range(i + 1, min(3, len(singles))):
+                a, b = singles[i][1], singles[j][1]
+                rep.candidates.append(Candidate(
+                    name=f"{a.name}+{b.name}",
+                    overrides={SITE_GENE[a.name]: "pallas",
+                               SITE_GENE[b.name]: "pallas"},
+                    rationale={"combo_of": [a.name, b.name]}))
+    return rep

@@ -1,0 +1,127 @@
+"""Collective census + transfer-batching analysis (paper §3.1 analogue).
+
+The paper hoists CPU<->GPU variable transfers to the outermost nest level and
+batches them.  The TPU-pod analogue is collective traffic: this module parses
+post-SPMD HLO, counts every collective's payload, and flags *batching
+opportunities* — many small same-shape collectives that could be fused (the
+per-layer vs scan-level gradient reduction the ``fused_grad_reduce`` gene
+controls).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred)"
+                       r"\[([0-9,]*)\]")
+
+
+def shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    payload_bytes: int
+    shape_sig: str
+
+
+def parse_collectives(hlo_text: str) -> list[CollectiveOp]:
+    ops: list[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$", ls)
+        if not m:
+            continue
+        rhs = m.group(1)
+        for kind in COLLECTIVES:
+            opm = re.search(r"\b" + kind + r"(?:-start|-done)?\(", rhs)
+            if not opm:
+                continue
+            if kind + "-done" in rhs[opm.start():opm.end()]:
+                break                        # avoid double count of async pair
+            result_part = rhs[:opm.start()]
+            operand_part = rhs[opm.end():]
+            depth, end = 1, len(operand_part)
+            for i, ch in enumerate(operand_part):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            payload = max(shape_bytes(result_part),
+                          shape_bytes(operand_part[:end]))
+            if kind == "all-reduce":
+                payload *= 2                 # reduce + broadcast phases
+            sig = ",".join(f"{d}[{s}]" for d, s in
+                           _SHAPE_RE.findall(result_part)) or "?"
+            ops.append(CollectiveOp(kind, payload, sig))
+            break
+    return ops
+
+
+def census(hlo_text: str) -> dict:
+    ops = parse_collectives(hlo_text)
+    out: dict = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    for op in ops:
+        out[op.kind]["count"] += 1
+        out[op.kind]["bytes"] += op.payload_bytes
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for v in out.values()
+                             if isinstance(v, dict))
+    return out
+
+
+@dataclass
+class BatchingReport:
+    """Same-shape collectives repeated many times -> fuse/batch candidates."""
+    groups: list = field(default_factory=list)   # (kind, sig, count, bytes)
+    fusible_ops: int = 0
+    fusible_bytes: int = 0
+    latency_savings_estimate_s: float = 0.0
+
+    def summary(self) -> str:
+        return (f"{self.fusible_ops} fusible collective ops in "
+                f"{len(self.groups)} groups, {self.fusible_bytes/2**20:.1f} "
+                f"MiB payload, ~{self.latency_savings_estimate_s*1e6:.0f} us "
+                f"launch latency saved")
+
+
+# per-collective launch overhead on ICI (model constant, ~us-scale)
+COLLECTIVE_LAUNCH_S = 5e-6
+
+
+def batching_report(hlo_text: str, min_repeat: int = 4) -> BatchingReport:
+    ops = parse_collectives(hlo_text)
+    by_sig: dict[tuple, list[CollectiveOp]] = {}
+    for op in ops:
+        by_sig.setdefault((op.kind, op.shape_sig), []).append(op)
+    rep = BatchingReport()
+    for (kind, sig), group in sorted(by_sig.items(),
+                                     key=lambda kv: -len(kv[1])):
+        if len(group) >= min_repeat:
+            b = sum(o.payload_bytes for o in group)
+            rep.groups.append({"kind": kind, "sig": sig,
+                               "count": len(group), "bytes": b})
+            rep.fusible_ops += len(group) - 1
+            rep.fusible_bytes += b
+    rep.latency_savings_estimate_s = rep.fusible_ops * COLLECTIVE_LAUNCH_S
+    return rep

@@ -1,0 +1,188 @@
+"""Verification environment — measure a plan's time & power.
+
+The paper measures each offload pattern on a real verification machine
+(3-minute timeout -> 1000 s penalty).  Two rungs here:
+
+* ``analytic``  — estimate_program + PowerModel, milliseconds per pattern.
+  Used by the GA inner loop and all tests.
+* ``compiled``  — spawn the dry-run in a subprocess (512 placeholder devices,
+  real GSPMD lowering of the actual plan), read back cost/collective/memory
+  analysis, convert to time/power with the same roofline model.  Expensive —
+  exactly the FPGA-compile asymmetry the paper's narrowing exists for.
+
+Every measured pattern is cached by genome key: the paper re-measures only
+new patterns.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+import time
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Optional
+
+from repro.configs.base import ArchConfig, PlanConfig, SHAPES
+from repro.core.fitness import TIMEOUT_PENALTY_S, TIMEOUT_SECONDS, fitness
+from repro.core.intensity import estimate_program
+from repro.core.plan import PlanGenome
+from repro.core.power import PowerModel, V5E
+
+REPO_ROOT = Path(__file__).resolve().parents[3]
+
+
+@dataclass
+class Measurement:
+    seconds: float
+    watts: float
+    energy_j: float
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    peak_mem_per_chip: float = 0.0
+    source: str = "analytic"
+    ok: bool = True
+    error: str = ""
+
+    def fitness(self, alpha: float = 0.5, beta: float = 0.5) -> float:
+        return fitness(self.seconds, self.watts, alpha, beta)
+
+
+def penalty_measurement(error: str, power: PowerModel) -> Measurement:
+    """Paper §4.1: timeout/failure -> processing time := 1000 s."""
+    return Measurement(seconds=TIMEOUT_PENALTY_S,
+                       watts=power.hw.p_static,
+                       energy_j=TIMEOUT_PENALTY_S * power.hw.p_static,
+                       ok=False, error=error, source="penalty")
+
+
+@dataclass
+class Verifier:
+    cfg: ArchConfig
+    shape_name: str
+    n_chips: int = 256
+    tp: int = 16
+    mode: str = "analytic"              # analytic | compiled
+    power: PowerModel = field(default_factory=lambda: PowerModel(V5E))
+    timeout_s: float = TIMEOUT_SECONDS
+    overlap: float = 0.0                # collective/compute overlap fraction
+    cache: dict = field(default_factory=dict)
+    n_trials: int = 0                   # actual (non-cache) measurements
+
+    @property
+    def shape(self):
+        return SHAPES[self.shape_name]
+
+    # ------------------------------------------------------------------
+
+    def measure(self, genome: PlanGenome) -> Measurement:
+        key = (genome.key(), self.mode)
+        if key in self.cache:
+            return self.cache[key]
+        self.n_trials += 1
+        plan = genome.to_plan()
+        if self.mode == "compiled":
+            m = self._measure_compiled(plan)
+        else:
+            m = self._measure_analytic(plan)
+        self.cache[key] = m
+        return m
+
+    def measure_plan(self, plan: PlanConfig, kind: Optional[str] = None
+                     ) -> Measurement:
+        g = PlanGenome.from_plan(self.cfg, kind or self.shape.kind, plan)
+        # from_plan snaps to the gene alphabet; measure the exact plan instead
+        if self.mode == "compiled":
+            return self._measure_compiled(plan)
+        return self._measure_analytic(plan)
+
+    # ------------------------------------------------------------------
+
+    def _finish(self, flops, hbm, coll, peak_mem, source,
+                overlap=None, coll_ops: int = 0) -> Measurement:
+        if peak_mem > self.power.hw.hbm_bytes:
+            return penalty_measurement(
+                f"OOM: {peak_mem/2**30:.1f} GiB/chip > "
+                f"{self.power.hw.hbm_bytes/2**30:.0f} GiB", self.power)
+        overlap = self.overlap if overlap is None else overlap
+        t = self.power.step_time(flops, hbm, coll, self.n_chips, overlap)
+        if coll_ops:
+            import math as _m
+            # per-collective launch/hop latency grows with ring size
+            t += coll_ops * 5e-6 * max(_m.log2(max(self.n_chips, 2)), 1.0) \
+                * (1.0 - overlap)
+        w = self.power.watts(flops, hbm, coll * self.n_chips, t,
+                             self.n_chips) / self.n_chips
+        e = w * t * self.n_chips
+        return Measurement(seconds=t, watts=w, energy_j=e, flops=flops,
+                           hbm_bytes=hbm, coll_bytes=coll,
+                           peak_mem_per_chip=peak_mem, source=source)
+
+    def _measure_analytic(self, plan: PlanConfig) -> Measurement:
+        try:
+            est = estimate_program(self.cfg, self.shape, plan,
+                                   self.n_chips, self.tp)
+        except Exception as e:
+            return penalty_measurement(f"{type(e).__name__}: {e}", self.power)
+        return self._finish(est.flops, est.hbm_bytes, est.coll_bytes,
+                            est.peak_mem_per_chip, "analytic",
+                            overlap=0.5 if plan.overlap_collectives else None,
+                            coll_ops=est.coll_ops)
+
+    def _measure_compiled(self, plan: PlanConfig) -> Measurement:
+        """Spawn the dry-run (fresh process => 512 placeholder devices)."""
+        import dataclasses
+        import hashlib
+        plan_json = json.dumps(dataclasses.asdict(plan), sort_keys=True)
+        tag = "_p" + hashlib.sha1(plan_json.encode()).hexdigest()[:10]
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", self.cfg.name, "--shape", self.shape_name,
+               "--plan-json", plan_json, "--tag", tag]
+        env = dict(PYTHONPATH=str(REPO_ROOT / "src"),
+                   PATH="/usr/bin:/bin", HOME="/root")
+        t0 = time.time()
+        try:
+            subprocess.run(cmd, timeout=self.timeout_s, capture_output=True,
+                           cwd=REPO_ROOT, env=env, check=False)
+        except subprocess.TimeoutExpired:
+            return penalty_measurement(
+                f"verification timeout after {self.timeout_s:.0f}s "
+                f"(paper's 3-minute rule)", self.power)
+        mesh_name = "pod16x16"
+        rec_path = (REPO_ROOT / "artifacts" / "dryrun" /
+                    f"{self.cfg.name}__{self.shape_name}__{mesh_name}{tag}.json")
+        if not rec_path.exists():
+            return penalty_measurement("dry-run produced no record",
+                                       self.power)
+        rec = json.loads(rec_path.read_text())
+        if rec.get("status") != "OK":
+            return penalty_measurement(rec.get("error", "dry-run failed"),
+                                       self.power)
+        # cost_analysis counts loop bodies once -> correct with known trip
+        # counts (layers scan x microbatch scan), then fall back to the
+        # analytic estimate for the portions HLO cannot attribute.
+        est = estimate_program(self.cfg, self.shape, plan,
+                               self.n_chips, self.tp)
+        coll = rec["collectives"]["total_bytes"] * self._trip_correction(plan)
+        m = self._finish(est.flops, est.hbm_bytes, coll,
+                         self._mem_estimate(rec), "compiled")
+        m.error = ""
+        return m
+
+    def _trip_correction(self, plan: PlanConfig) -> float:
+        from repro.models.transformer import unit_structure
+        _, n_full, tail = unit_structure(self.cfg)
+        trips = max(n_full, 1)
+        if self.shape.kind == "train":
+            trips *= max(plan.microbatches, 1)
+        return float(trips)
+
+    def _mem_estimate(self, rec: dict) -> float:
+        mem = rec.get("memory", {})
+        raw = mem.get("argument_size_in_bytes", 0) \
+            + mem.get("temp_size_in_bytes", 0)
+        # CPU-backend dry-runs upcast bf16 dots to f32 (DESIGN.md §8):
+        # halve the temp estimate toward the TPU target.
+        return mem.get("argument_size_in_bytes", 0) \
+            + mem.get("temp_size_in_bytes", 0) * 0.5 if raw else 0.0

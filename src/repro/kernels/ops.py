@@ -1,0 +1,157 @@
+"""jit'd public wrappers for the Pallas kernels (the 'pallas' destination).
+
+These are what the model layers call when the offload plan selects the
+Pallas rung.  Each wrapper normalizes layouts, picks hardware-aligned block
+shapes and falls back to the pure-jnp oracle when the shape cannot be tiled
+(odd sizes below one block).  ``interpret=True`` everywhere in this
+container (CPU validation of TPU-targeted kernels).
+
+Every op carries a ``jax.custom_vjp``: the forward runs the Pallas kernel,
+the backward differentiates the pure-jnp oracle (rematerialized) — so the
+'pallas' destination is usable in train plans, not just inference.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mriq import mriq_pallas as _mriq
+from repro.kernels.rglru import rglru_pallas as _rglru
+from repro.kernels.ssd import ssd_pallas as _ssd
+from repro.kernels.swiglu import swiglu_pallas as _swiglu
+
+INTERPRET = True    # CPU container: Pallas kernels validated in interpret mode
+
+
+def _blk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (hardware-aligned when possible)."""
+    b = min(target, n)
+    while n % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash_op(q, k, v, causal, window):
+    s, t = q.shape[1], k.shape[1]
+    bq = _blk(s, 128)
+    bk = _blk(t, 128)
+    if bq < 8 or bk < 8:
+        return _ref.flash_attention_ref(q, k, v, causal, window)
+    return _flash(q, k, v, causal=causal, window=window,
+                  block_q=bq, block_k=bk, interpret=INTERPRET)
+
+
+def _flash_fwd(q, k, v, causal, window):
+    return _flash_op(q, k, v, causal, window), (q, k, v)
+
+
+def _flash_bwd(causal, window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda a, b, c:
+                     _ref.flash_attention_ref(a, b, c, causal, window),
+                     q, k, v)
+    return vjp(g)
+
+
+_flash_op.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0):
+    return _flash_op(q, k, v, causal, window)
+
+
+def mriq(kx, ky, kz, phi_mag, x, y, z, block_n: int = 512,
+         block_m: int = 512):
+    bn = _blk(x.shape[0], block_n)
+    bm = _blk(kx.shape[0], block_m)
+    return _mriq(kx, ky, kz, phi_mag, x, y, z, block_n=bn, block_m=bm,
+                 interpret=INTERPRET)
+
+
+@jax.custom_vjp
+def rglru(log_a, b):
+    bsz, s, w = log_a.shape
+    bw = _blk(w, 512)
+    bt = _blk(s, 128)
+    if bw < 8 or bt < 8:
+        return _ref.rglru_ref(log_a, b)
+    return _rglru(log_a.astype(jnp.float32), b.astype(jnp.float32),
+                  block_w=bw, block_t=bt, interpret=INTERPRET)
+
+
+def _rglru_fwd(log_a, b):
+    return rglru(log_a, b), (log_a, b)
+
+
+def _rglru_bwd(res, g):
+    log_a, b = res
+    _, vjp = jax.vjp(_ref.rglru_ref, log_a, b)
+    return vjp(g.astype(jnp.float32))
+
+
+rglru.defvjp(_rglru_fwd, _rglru_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _ssd_op(x, dt, A, Bm, Cm, chunk):
+    s = x.shape[1]
+    q = _blk(s, chunk)
+    if q < 8:
+        return _ref.ssd_ref(x, dt, A, Bm, Cm, max(q, 1))
+    return _ssd(x, dt, A, Bm, Cm, chunk=q, interpret=INTERPRET)
+
+
+def _ssd_fwd(x, dt, A, Bm, Cm, chunk):
+    return _ssd_op(x, dt, A, Bm, Cm, chunk), (x, dt, A, Bm, Cm)
+
+
+def _ssd_bwd(chunk, res, g):
+    x, dt, A, Bm, Cm = res
+    _, vjp = jax.vjp(lambda *a: _ref.ssd_ref(*a, chunk=max(chunk, 1)),
+                     x, dt, A, Bm, Cm)
+    return vjp(g)
+
+
+_ssd_op.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def ssd(x, dt, A, Bm, Cm, chunk: int = 128):
+    return _ssd_op(x, dt, A, Bm, Cm, chunk)
+
+
+@jax.custom_vjp
+def _swiglu_op(xf, wi, wg, wo):
+    t, d = xf.shape
+    bt = _blk(t, 256)
+    bf = _blk(wi.shape[1], 512)
+    if bt < 8 or bf < 8:
+        return _ref.swiglu_ref(xf, wi, wg, wo)
+    return _swiglu(xf, wi, wg, wo, block_t=bt, block_f=bf,
+                   interpret=INTERPRET)
+
+
+def _swiglu_fwd(xf, wi, wg, wo):
+    return _swiglu_op(xf, wi, wg, wo), (xf, wi, wg, wo)
+
+
+def _swiglu_bwd(res, g):
+    _, vjp = jax.vjp(_ref.swiglu_ref, *res)
+    return vjp(g)
+
+
+_swiglu_op.defvjp(_swiglu_fwd, _swiglu_bwd)
+
+
+def fused_swiglu(x, wi, wg, wo):
+    """x (..., d) -> (..., d); flattens leading dims for the kernel."""
+    lead = x.shape[:-1]
+    d = x.shape[-1]
+    t = math.prod(lead)
+    y = _swiglu_op(x.reshape(t, d), wi, wg, wo)
+    return y.reshape(*lead, d)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention_naive
+from repro.models.rglru import rglru_scan
+from repro.models.ssm import ssd_chunked
+
+
+def mriq_ref(kx, ky, kz, phi_mag, x, y, z):
+    """Parboil MRI-Q: Q matrix for non-Cartesian 3D MRI reconstruction.
+
+    Q_r(n) = sum_m phi_mag[m] * cos(2*pi * (kx[m] x[n] + ky[m] y[n] + kz[m] z[n]))
+    Q_i(n) = sum_m phi_mag[m] * sin(2*pi * ...)
+    """
+    ang = 2.0 * jnp.pi * (jnp.outer(x, kx) + jnp.outer(y, ky)
+                          + jnp.outer(z, kz))          # (N, M)
+    qr = jnp.sum(phi_mag[None, :] * jnp.cos(ang), axis=1)
+    qi = jnp.sum(phi_mag[None, :] * jnp.sin(ang), axis=1)
+    return qr, qi
+
+
+def flash_attention_ref(q, k, v, causal=True, window=0):
+    """q (B,S,Hq,D), k/v (B,S,Hkv,D) -> (B,S,Hq,D)."""
+    s = q.shape[1]
+    pos = jnp.arange(s)
+    return attention_naive(q, k, v, pos, pos, causal, window)
+
+
+def rglru_ref(log_a, b):
+    """h_t = exp(log_a_t) h_{t-1} + b_t  over axis 1."""
+    return rglru_scan(log_a, b)
+
+
+def ssd_ref(x, dt, A, Bm, Cm, chunk=64):
+    """Mamba2 SSD. Returns (y, final_state)."""
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk)
+
+
+def swiglu_ref(x, wi, wg, wo):
+    """(T,d) x -> ((silu(x wg) * (x wi)) wo)."""
+    h = x @ wi
+    g = x @ wg
+    return (jax.nn.silu(g) * h) @ wo

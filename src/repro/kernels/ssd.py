@@ -1,0 +1,97 @@
+"""Mamba2 SSD chunked-scan kernel (Pallas).
+
+Grid: (batch, heads, chunks) with chunks 'arbitrary' (sequential).  Per
+chunk the kernel computes the intra-chunk dual quadratic form on the MXU
+(two (Q,Q)x(Q,P) matmuls) and carries the (P,N) inter-chunk SSM state in
+f32 VMEM scratch — the same math as models/ssm.ssd_chunked, but the decay
+matrix never leaves VMEM.
+
+Inputs are pre-projected per head: xd = x*dt (B,S,H,P), dA = dt*A (B,S,H),
+B/C (B,S,N) shared across heads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xd_ref, da_ref, b_ref, c_ref, y_ref, hlast_ref, state_scr,
+                *, block_q: int, n_chunks: int):
+    cb = pl.program_id(2)
+
+    @pl.when(cb == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    xd = xd_ref[0, :, 0].astype(jnp.float32)          # (Q, P)
+    da = da_ref[0, :, 0].astype(jnp.float32)          # (Q,)
+    bm = b_ref[0].astype(jnp.float32)                 # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)                 # (Q, N)
+
+    cum = jnp.cumsum(da)                              # (Q,)
+    cb_scores = cm @ bm.T                             # (Q, Q)
+    decay = jnp.exp(cum[:, None] - cum[None, :])
+    tri = jnp.tril(jnp.ones((block_q, block_q), jnp.float32))
+    w = cb_scores * decay * tri
+    y_intra = w @ xd                                  # (Q, P)
+
+    state = state_scr[...]                            # (P, N)
+    y_inter = jnp.exp(cum)[:, None] * (cm @ state.T)  # (Q, P)
+
+    tail = jnp.exp(cum[-1] - cum)                     # (Q,)
+    s_c = (xd * tail[:, None]).T @ bm                 # (P, N)
+    state = jnp.exp(cum[-1]) * state + s_c
+    state_scr[...] = state
+
+    y_ref[0, :, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    @pl.when(cb == n_chunks - 1)
+    def _final():
+        hlast_ref[0, 0] = state.astype(hlast_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_pallas(x, dt, A, Bm, Cm, chunk: int = 128, interpret: bool = True):
+    """x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N) -> (y, final_state).
+
+    Matches models/ssm.ssd_chunked (the oracle).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    grid = (b, h, nc)
+
+    xd = (x * dt[..., None]).astype(jnp.float32)
+    da = (dt * A).astype(jnp.float32)
+
+    xd_spec = pl.BlockSpec((1, chunk, 1, p),
+                           lambda bb, hh, cc: (bb, cc, hh, 0))
+    da_spec = pl.BlockSpec((1, chunk, 1),
+                           lambda bb, hh, cc: (bb, cc, hh))
+    bc_spec = pl.BlockSpec((1, chunk, n),
+                           lambda bb, hh, cc: (bb, cc, 0))
+    y_spec = pl.BlockSpec((1, chunk, 1, p),
+                          lambda bb, hh, cc: (bb, cc, hh, 0))
+    hl_spec = pl.BlockSpec((1, 1, p, n),
+                           lambda bb, hh, cc: (bb, hh, 0, 0))
+
+    y, hlast = pl.pallas_call(
+        functools.partial(_ssd_kernel, block_q=chunk, n_chunks=nc),
+        grid=grid,
+        in_specs=[xd_spec, da_spec, bc_spec, bc_spec],
+        out_specs=[y_spec, hl_spec],
+        out_shape=[jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+                   jax.ShapeDtypeStruct((b, h, p, n), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+        compiler_params=dict(mosaic=dict(
+            dimension_semantics=("parallel", "parallel", "arbitrary")))
+        if not interpret else None,
+    )(xd, da, Bm, Cm)
+    return y, hlast

@@ -1,0 +1,69 @@
+"""Fused SwiGLU MLP kernel (Pallas).
+
+y = (silu(x @ wg) * (x @ wi)) @ wo with the (T, d_ff) intermediate never
+leaving VMEM: grid (token_blocks, ff_blocks) with ff 'arbitrary'
+(sequential), accumulating the second matmul into a (block_t, d) f32
+scratch.  The VMEM working set is 2 weight panels + x/y blocks — the
+narrowing resource pre-check rejects configs whose panels exceed VMEM
+(exactly the FPGA FF/LUT rejection of the paper).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _swiglu_kernel(x_ref, wi_ref, wg_ref, wo_ref, y_ref, acc_scr,
+                   *, n_ff_blocks: int):
+    fb = pl.program_id(1)
+
+    @pl.when(fb == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[...].astype(jnp.float32)                # (bt, d)
+    wi = wi_ref[...].astype(jnp.float32)              # (d, bf)
+    wg = wg_ref[...].astype(jnp.float32)
+    wo = wo_ref[...].astype(jnp.float32)              # (bf, d)
+    h = x @ wi
+    g = x @ wg
+    acc_scr[...] += (g * jax.nn.sigmoid(g) * h) @ wo
+
+    @pl.when(fb == n_ff_blocks - 1)
+    def _out():
+        y_ref[...] = acc_scr[...].astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f",
+                                             "interpret"))
+def swiglu_pallas(x, wi, wg, wo, block_t: int = 256, block_f: int = 512,
+                  interpret: bool = True):
+    """x (T,d); wi,wg (d,f); wo (f,d) -> (T,d)."""
+    t, d = x.shape
+    f = wi.shape[1]
+    block_t = min(block_t, t)
+    block_f = min(block_f, f)
+    assert t % block_t == 0 and f % block_f == 0
+    grid = (t // block_t, f // block_f)
+
+    x_spec = pl.BlockSpec((block_t, d), lambda tb, fb: (tb, 0))
+    wi_spec = pl.BlockSpec((d, block_f), lambda tb, fb: (0, fb))
+    wo_spec = pl.BlockSpec((block_f, d), lambda tb, fb: (fb, 0))
+    y_spec = pl.BlockSpec((block_t, d), lambda tb, fb: (tb, 0))
+
+    return pl.pallas_call(
+        functools.partial(_swiglu_kernel, n_ff_blocks=grid[1]),
+        grid=grid,
+        in_specs=[x_spec, wi_spec, wi_spec, wo_spec],
+        out_specs=y_spec,
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_t, d), jnp.float32)],
+        interpret=interpret,
+        compiler_params=dict(mosaic=dict(
+            dimension_semantics=("parallel", "arbitrary")))
+        if not interpret else None,
+    )(x, wi, wg, wo)

@@ -1,0 +1,233 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 placeholder host devices, lowers the real
+train/prefill/decode step with the real shardings, compiles it, and records
+``memory_analysis()`` (fits?), ``cost_analysis()`` (FLOPs/bytes) and the
+collective payload census parsed from the post-SPMD HLO (for §Roofline).
+
+Results are JSON-cached under artifacts/dryrun/ — reruns are incremental.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  python -m repro.launch.dryrun --all                  # single-pod sweep
+  python -m repro.launch.dryrun --all --multi-pod      # 2-pod sweep
+"""
+# The VERY FIRST lines — before ANY other import — jax locks the device
+# count on first init.  Dry-run only; tests/benches must see 1 device.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.parallel.param_sharding import (batch_shardings, cache_shardings,
+                                           opt_shardings, param_shardings)
+from repro.parallel.sharding import make_rules
+from repro.train.step import make_opt_init, make_train_step
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+from repro.core.transfer import census as collective_census  # noqa: E402
+
+
+def model_flops(cfg, shape) -> float:
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch     # decode: one token per sequence
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    if not out:
+        out["repr"] = str(mem)
+    return out
+
+
+def _clamp_microbatches(plan, shape, mesh) -> int:
+    """Microbatch size must stay divisible by the batch sharding ways."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ways = sizes.get("data", 1) * sizes.get("pod", 1)
+    if not plan.use_tp:   # model axis joins batch sharding (pure DP)
+        ways *= sizes.get("model", 1)
+    per_shard = max(shape.global_batch // ways, 1)
+    n = min(plan.microbatches, per_shard)
+    while per_shard % n:
+        n -= 1
+    return n
+
+
+def build_step(arch: str, shape_name: str, mesh, plan=None):
+    """Returns (fn, args_specs, in_shardings, donate) for the cell."""
+    import dataclasses
+    cfg = get_config(arch)
+    if plan is not None:
+        cfg = dataclasses.replace(cfg, plan=plan)
+    shape = SHAPES[shape_name]
+    n_micro = _clamp_microbatches(cfg.plan, shape, mesh)
+    if n_micro != cfg.plan.microbatches:
+        cfg = dataclasses.replace(
+            cfg, plan=cfg.plan.replace(microbatches=n_micro))
+    model = Model(cfg)
+    rules = make_rules(cfg, mesh, cfg.plan)
+    aparams = model.abstract_params()
+    p_sh = param_shardings(aparams, rules)
+    b_specs = model.input_specs(shape)
+    b_sh = batch_shardings(model, shape, rules)
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(make_opt_init(model), aparams)
+        o_sh = opt_shardings(opt_abs, aparams, rules)
+        fn = make_train_step(model, rules)
+        scalar = NamedSharding(mesh, P())
+        out_sh = (p_sh, o_sh, {"loss": scalar, "grad_norm": scalar})
+        return (fn, (aparams, opt_abs, b_specs), (p_sh, o_sh, b_sh),
+                out_sh, (0, 1), cfg, shape)
+
+    cache_abs = model.abstract_cache(shape.global_batch, shape.seq_len)
+    c_sh = cache_shardings(cache_abs, rules)
+    from repro.parallel.param_sharding import pick_spec
+    logits_sh = NamedSharding(mesh, pick_spec(
+        (shape.global_batch, cfg.vocab_size), [("batch", "vocab")], rules))
+    if shape.kind == "prefill":
+        def fn(params, batch, cache):
+            return model.prefill(params, batch, cache, rules)
+    else:
+        def fn(params, batch, cache):
+            return model.decode_step(params, batch, cache, rules)
+    return (fn, (aparams, b_specs, cache_abs), (p_sh, b_sh, c_sh),
+            (logits_sh, c_sh), (2,), cfg, shape)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             force: bool = False, plan=None, tag: str = "") -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    key = f"{arch}__{shape_name}__{mesh_name}{tag}"
+    out_path = ART / f"{key}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "params": cfg.param_count(),
+           "active_params": cfg.active_param_count()}
+    if shape_name in cfg.skip_shapes:
+        rec.update(status="SKIP", reason=cfg.skip_shapes[shape_name])
+        ART.mkdir(parents=True, exist_ok=True)
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        fn, args, in_sh, out_sh, donate, cfg2, shape = build_step(
+            arch, shape_name, mesh, plan)
+        with mesh:
+            jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+        census = collective_census(hlo)
+        from repro.core.transfer import batching_report
+        brep = batching_report(hlo)
+        n_chips = mesh.devices.size
+        rec.update(
+            status="OK",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            n_chips=n_chips,
+            hlo_flops=float(cost.get("flops", 0.0)),
+            hlo_bytes=float(cost.get("bytes accessed", 0.0)),
+            collectives=census,
+            batching={"fusible_ops": brep.fusible_ops,
+                      "fusible_bytes": brep.fusible_bytes,
+                      "groups": brep.groups[:6]},
+            memory=_mem_dict(mem),
+            model_flops=model_flops(cfg2, shape),
+            plan=cfg2.plan.describe(),
+        )
+    except Exception as e:  # sharding mismatch / OOM-at-compile are bugs
+        rec.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:],
+                   seconds=round(time.time() - t0, 2))
+    ART.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--plan-json", default=None,
+                    help="PlanConfig overrides as JSON (verifier subprocess)")
+    ap.add_argument("--tag", default="",
+                    help="cache-key suffix for plan variants")
+    args = ap.parse_args()
+
+    plan = None
+    if args.plan_json:
+        from repro.configs.base import PlanConfig
+        plan = PlanConfig(**json.loads(args.plan_json))
+
+    cells = []
+    if args.all or not args.arch:
+        archs = [a for a in list_archs() if not a.startswith("tiny")]
+    else:
+        archs = [args.arch]
+    for a in archs:
+        shapes = ([args.shape] if args.shape else list(SHAPES))
+        for s in shapes:
+            cells.append((a, s))
+
+    for a, s in cells:
+        rec = run_cell(a, s, args.multi_pod, args.force or bool(args.tag),
+                       plan=plan, tag=args.tag)
+        line = f"{rec['arch']:26s} {rec['shape']:12s} {rec['mesh']:10s} {rec['status']}"
+        if rec["status"] == "OK":
+            mem = rec["memory"]
+            per_dev = (mem.get("argument_size_in_bytes", 0)
+                       + mem.get("temp_size_in_bytes", 0))
+            line += (f"  compile={rec['compile_s']:.0f}s"
+                     f" flops={rec['hlo_flops']:.3g}"
+                     f" coll={rec['collectives']['total_bytes']:.3g}B"
+                     f" mem/dev={per_dev/2**30:.2f}GiB")
+        elif rec["status"] == "FAIL":
+            line += "  " + rec["error"][:120]
+        else:
+            line += "  " + rec["reason"][:80]
+        print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

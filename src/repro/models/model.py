@@ -1,0 +1,122 @@
+"""Model facade: init / loss / prefill / decode + abstract input specs.
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins for every input of
+the lowered step (weak-type-correct, shardable, no device allocation) — the
+pattern the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, PlanConfig, ShapeSpec
+from repro.models import transformer as T
+from repro.parallel.sharding import ShardingRules
+
+
+def cross_entropy(logits, targets):
+    """Mean next-token CE in f32. logits (B,S,V), targets (B,S).
+
+    The target log-prob uses an iota-compare reduction instead of
+    ``take_along_axis`` so a vocab-sharded logits tensor never gets
+    all-gathered (the compare+sum is local per vocab shard + one psum).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    ll = jnp.sum(jnp.where(iota == targets[..., None], logits, 0.0), axis=-1)
+    return jnp.mean(lse - ll)
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, plan: Optional[PlanConfig] = None):
+        self.cfg = cfg
+        self.plan = plan or cfg.plan
+
+    def with_plan(self, plan: PlanConfig) -> "Model":
+        return Model(self.cfg, plan)
+
+    # -- parameters ----------------------------------------------------------
+
+    def init(self, key) -> Any:
+        return T.init_params(key, self.cfg)
+
+    def abstract_params(self) -> Any:
+        key = jax.random.PRNGKey(0)
+        return jax.eval_shape(lambda k: T.init_params(k, self.cfg), key)
+
+    def init_cache(self, batch: int, seq_len: int) -> Any:
+        return T.init_cache(self.cfg, batch, seq_len)
+
+    def abstract_cache(self, batch: int, seq_len: int) -> Any:
+        return jax.eval_shape(lambda: T.init_cache(self.cfg, batch, seq_len))
+
+    # -- steps ---------------------------------------------------------------
+
+    def loss(self, params, batch: dict, rules: Optional[ShardingRules] = None):
+        logits, _, aux = T.forward(params, batch, self.cfg, self.plan,
+                                   rules=rules)
+        ce = cross_entropy(logits, batch["targets"])
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, batch: dict, cache,
+                rules: Optional[ShardingRules] = None):
+        logits, cache, _ = T.forward(params, batch, self.cfg, self.plan,
+                                     cache=cache, rules=rules)
+        return logits[:, -1], cache
+
+    def decode_step(self, params, batch: dict, cache,
+                    rules: Optional[ShardingRules] = None):
+        logits, cache, _ = T.forward(params, batch, self.cfg, self.plan,
+                                     cache=cache, decode=True, rules=rules)
+        return logits[:, -1], cache
+
+    # -- abstract inputs -----------------------------------------------------
+
+    def input_specs(self, shape: ShapeSpec) -> dict:
+        cfg = self.cfg
+        b = shape.global_batch
+        s = shape.seq_len
+        i32 = jnp.int32
+        bf16 = jnp.bfloat16
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            specs: dict[str, Any] = {}
+            if cfg.frontend == "audio_frames":
+                specs["features"] = sds((b, s, cfg.d_model), bf16)
+            else:
+                specs["tokens"] = sds((b, s), i32)
+            if cfg.frontend == "vision_patches":
+                specs["patch_embeds"] = sds((b, cfg.n_patches, cfg.d_model), bf16)
+            specs["targets"] = sds((b, s), i32)
+            return specs
+        if shape.kind == "prefill":
+            specs = {}
+            if cfg.frontend == "audio_frames":
+                specs["features"] = sds((b, s, cfg.d_model), bf16)
+            else:
+                specs["tokens"] = sds((b, s), i32)
+            if cfg.frontend == "vision_patches":
+                specs["patch_embeds"] = sds((b, cfg.n_patches, cfg.d_model), bf16)
+            return specs
+        # decode: one new token against a seq_len-deep cache
+        return {"tokens": sds((b, 1), i32),
+                "pos": sds((), i32)}
+
+    def batch_spec_names(self, shape: ShapeSpec) -> dict[str, tuple]:
+        """Logical axis names per input (for in_shardings)."""
+        cfg = self.cfg
+        out: dict[str, tuple] = {}
+        for k in self.input_specs(shape):
+            if k == "pos":
+                out[k] = ()
+            elif k in ("features",):
+                out[k] = ("batch", None, None)
+            elif k == "patch_embeds":
+                out[k] = ("batch", None, None)
+            else:
+                out[k] = ("batch", None)
+        return out

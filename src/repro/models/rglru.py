@@ -1,0 +1,108 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x -> {linear -> causal conv -> RG-LRU} * {linear -> GeLU} -> out proj.
+RG-LRU per channel:
+    r_t = sigmoid(W_a x_t + b_a)
+    i_t = sigmoid(W_x x_t + b_x)
+    log_a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = exp(log_a_t) * h_{t-1} + sqrt(1 - exp(2 log_a_t)) * (i_t * x_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` over the (a, b) linear
+recurrence; the 'pallas' destination routes to the blocked-scan kernel.
+Decode is the single-step recurrence on a (B, W) carried state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, PlanConfig
+from repro.models.layers import _normal, pdtype, cdtype
+
+RG_C = 8.0
+
+
+def init_rglru_block(key, cfg: ArchConfig):
+    d, w, k = cfg.d_model, cfg.lru_width, cfg.ssm_conv
+    dt = pdtype(cfg.plan)
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a in (0.9, 0.999) as in Griffin
+    u = jax.random.uniform(ks[5], (w,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.exp(-jnp.log(u) / (2 * RG_C)) - 1.0)   # softplus^-1
+    return {
+        "w_in_x": _normal(ks[0], (d, w), dt, 1 / math.sqrt(d)),
+        "w_in_g": _normal(ks[1], (d, w), dt, 1 / math.sqrt(d)),
+        "conv_w": _normal(ks[2], (k, w), dt, 1 / math.sqrt(k)),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_a": _normal(ks[3], (w, w), dt, 1 / math.sqrt(w)),
+        "b_a": jnp.zeros((w,), dt),
+        "w_x": _normal(ks[4], (w, w), dt, 1 / math.sqrt(w)),
+        "b_x": jnp.zeros((w,), dt),
+        "lam": lam.astype(dt),
+        "w_out": _normal(ks[2], (w, d), dt, 1 / math.sqrt(w)),
+    }
+
+
+def rglru_gates(params, x):
+    """x (B,S,W) -> (log_a, bgated) both f32: h_t = a h + b."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ params["w_a"].astype(jnp.float32)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(x32 @ params["w_x"].astype(jnp.float32)
+                       + params["b_x"].astype(jnp.float32))
+    log_a = -RG_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x32)
+    return log_a, b
+
+
+def rglru_scan(log_a, b):
+    """Associative linear recurrence over axis 1. (B,S,W) -> h (B,S,W)."""
+    a = jnp.exp(log_a)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def run_rglru_block(params, x, cfg: ArchConfig, plan: PlanConfig,
+                    cache=None, decode=False):
+    """Returns (y, new_cache). cache = {'conv': (B,K-1,W), 'h': (B,W)}."""
+    from repro.models.ssm import _causal_conv
+
+    dt_c = cdtype(plan)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_in_g"].astype(dt_c)))
+    u = jnp.einsum("bsd,dw->bsw", x, params["w_in_x"].astype(dt_c))
+    u, new_conv = _causal_conv(u, params["conv_w"].astype(dt_c),
+                               params["conv_b"].astype(dt_c),
+                               cache.get("conv") if cache else None)
+    log_a, b = rglru_gates(params, u)
+    if decode:
+        h_prev = cache["h"]                                # (B,W) f32
+        h = jnp.exp(log_a[:, 0]) * h_prev + b[:, 0]
+        hs = h[:, None]
+        new_cache = {"conv": new_conv, "h": h}
+    else:
+        if plan.rglru_impl == "pallas":
+            from repro.kernels import ops as kops
+            hs = kops.rglru(log_a, b)
+        else:
+            hs = rglru_scan(log_a, b)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"conv": new_conv, "h": hs[:, -1]}
+    y = hs.astype(dt_c) * gate
+    return jnp.einsum("bsw,wd->bsd", y, params["w_out"].astype(dt_c)), new_cache
+
+
+def init_rglru_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.lru_width), dtype),
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+    }

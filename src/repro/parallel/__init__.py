@@ -1,0 +1,7 @@
+from repro.parallel.sharding import (  # noqa: F401
+    MeshAxes,
+    ShardingRules,
+    make_rules,
+    logical,
+    spec_for,
+)

@@ -1,0 +1,246 @@
+"""Parameter / optimizer-state / cache sharding trees.
+
+Maps every leaf of the params, opt-state and cache pytrees to a
+``NamedSharding`` by walking the tree path and dispatching on container/leaf
+names.  Weights use 2D (fsdp × tensor) sharding; optimizer state inherits the
+param sharding (ZeRO by construction); factored adafactor stats drop the
+reduced axis; KV caches shard (batch, seq-or-kvheads).
+
+pjit requires input shardings to divide every dimension evenly, so each leaf
+carries a *candidate list* of logical specs; the first candidate that keeps
+the most mesh axes after the divisibility check wins (e.g. qwen2's 28 heads
+can't take 16-way TP, so its attention weights fall back to sharding the
+d_head dimension; mamba2's 50280 vocab falls back to sharding d_model).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, GetAttrKey, SequenceKey
+
+from repro.parallel.sharding import ShardingRules
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for k in path:
+        if isinstance(k, DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            out.append(str(k.idx))
+        elif isinstance(k, GetAttrKey):
+            out.append(k.name)
+    return out
+
+
+# 'model_dim' is a direct model-axis binding used for fallback candidates.
+_ATTN = {
+    "wq": [("embed", "heads", None), ("embed", None, "model_dim")],
+    "wk": [("embed", "kv_heads", None), ("embed", None, "model_dim")],
+    "wv": [("embed", "kv_heads", None), ("embed", None, "model_dim")],
+    "wo": [("heads", None, "embed"), (None, "model_dim", "embed")],
+    "bq": [("heads", None), (None, "model_dim")],
+    "bk": [("kv_heads", None), (None, "model_dim")],
+    "bv": [("kv_heads", None), (None, "model_dim")],
+}
+_MLP = {
+    "wi": [("embed", "ff")],
+    "wg": [("embed", "ff")],
+    "wo": [("ff", "embed")],
+    "bi": [("ff",)],
+    "bo": [(None,)],
+}
+_MOE = {
+    "router": [("embed", "experts")],
+    "wi": [("experts", "embed", None)],
+    "wg": [("experts", "embed", None)],
+    "wo": [("experts", None, "embed")],
+}
+_SSM = {
+    "in_proj": [("embed", "inner")],
+    "conv_w": [(None, "inner")],
+    "conv_b": [("inner",)],
+    "A_log": [(None,)],
+    "D": [(None,)],
+    "dt_bias": [(None,)],
+    "norm": [("inner",)],
+    "out_proj": [("inner", "embed")],
+}
+_RGLRU = {
+    "w_in_x": [("embed", "inner")],
+    "w_in_g": [("embed", "inner")],
+    "conv_w": [(None, "inner")],
+    "conv_b": [("inner",)],
+    "w_a": [(None, "inner")],
+    "b_a": [("inner",)],
+    "w_x": [(None, "inner")],
+    "b_x": [("inner",)],
+    "lam": [("inner",)],
+    "w_out": [("inner", "embed")],
+}
+
+
+def _leaf_candidates(names: list[str], ndim: int) -> list[tuple]:
+    last = names[-1]
+    if last == "embed":
+        return [("vocab", "embed"), (None, "model_dim")]
+    if last == "lm_head":
+        return [("embed", "vocab"), ("model_dim", None)]
+    if last == "frontend":
+        return [("embed", "model_dim")]
+    if "norm1" in names or "norm2" in names or "final_norm" in names:
+        return [(None,) * ndim]
+    table = None
+    if "moe" in names:
+        table = _MOE
+    elif "mlp" in names:
+        table = _MLP
+    elif "mixer" in names:
+        table = {**_ATTN, **_SSM, **_RGLRU}
+    cands = table.get(last) if table else None
+    return cands or [(None,) * ndim]
+
+
+def _axes_for(rules: ShardingRules, name: Optional[str]):
+    if name is None:
+        return None
+    if name == "model_dim":
+        # direct model-axis fallback; inert when the plan disables TP
+        return ("model",) if rules.rules.get("ff") else None
+    return rules.rules.get(name)
+
+
+def _mesh_axis_sizes(rules: ShardingRules) -> dict[str, int]:
+    return dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+
+
+def legalize(shape: tuple, spec: Sequence, rules: ShardingRules) -> tuple:
+    """Drop mesh axes that don't divide their dimension evenly."""
+    sizes = _mesh_axis_sizes(rules)
+    out = []
+    for i, name in enumerate(spec):
+        axes = _axes_for(rules, name)
+        if not axes:
+            out.append(None)
+            continue
+        k = 1
+        for a in axes:
+            k *= sizes[a]
+        out.append(tuple(axes) if shape[i] % k == 0 else None)
+    return tuple(out)
+
+
+def _n_sharded(spec: tuple) -> int:
+    return sum(1 for s in spec if s)
+
+
+def pick_spec(shape: tuple, candidates: list[tuple],
+              rules: ShardingRules) -> P:
+    best: tuple = (None,) * len(shape)
+    best_n = -1
+    for cand in candidates:
+        cand = tuple(cand)[:len(shape)]
+        cand = cand + (None,) * (len(shape) - len(cand))
+        legal = legalize(shape, cand, rules)
+        if _n_sharded(legal) > best_n:
+            best, best_n = legal, _n_sharded(legal)
+    return P(*best)
+
+
+def param_spec_tree(params: Any, rules: ShardingRules) -> Any:
+    """Pytree of PartitionSpec matching ``params``."""
+
+    def fn(path, leaf):
+        names = _path_names(path)
+        ndim = leaf.ndim
+        stacked = "scan" in names
+        cands = _leaf_candidates(names, ndim - (1 if stacked else 0))
+        if stacked:
+            cands = [(None,) + tuple(c) for c in cands]
+        return pick_spec(leaf.shape, cands, rules)
+
+    return jax.tree_util.tree_map_with_path(fn, params)
+
+
+def param_shardings(params: Any, rules: ShardingRules) -> Any:
+    specs = param_spec_tree(params, rules)
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_shardings(opt_state: Any, params: Any, rules: ShardingRules) -> Any:
+    pspecs = param_spec_tree(params, rules)
+    flat_pspecs = {tuple(_path_names(p)): s
+                   for p, s in jax.tree_util.tree_flatten_with_path(
+                       pspecs, is_leaf=lambda x: isinstance(x, P))[0]}
+
+    def fn(path, leaf):
+        names = _path_names(path)
+        if not hasattr(leaf, "shape") or leaf.ndim == 0:
+            return NamedSharding(rules.mesh, P())
+        head, kind = names[0], names[-1]
+        if head in ("m", "v", "ef"):
+            ppath = tuple(names[1:])
+            k = "full"
+            if kind in ("vr", "vc"):
+                ppath = tuple(names[1:-1])
+                k = kind
+            pspec = flat_pspecs.get(ppath)
+            if pspec is None:
+                return NamedSharding(rules.mesh, P())
+            parts = tuple(pspec)
+            if k == "vr":
+                parts = parts[:-1]
+            elif k == "vc":
+                parts = parts[:-2] + parts[-1:]
+            parts = parts[:leaf.ndim]
+            parts = parts + (None,) * (leaf.ndim - len(parts))
+            # re-check divisibility (factored shapes differ from params)
+            sizes = _mesh_axis_sizes(rules)
+            legal = []
+            for i, ax in enumerate(parts):
+                if not ax:
+                    legal.append(None)
+                    continue
+                axes = (ax,) if isinstance(ax, str) else tuple(ax)
+                kk = 1
+                for a in axes:
+                    kk *= sizes[a]
+                legal.append(axes if leaf.shape[i] % kk == 0 else None)
+            return NamedSharding(rules.mesh, P(*legal))
+        return NamedSharding(rules.mesh, P())
+
+    return jax.tree_util.tree_map_with_path(fn, opt_state)
+
+
+_CACHE = {
+    "k": [("cache_batch", "cache_seq", "cache_kv_heads", None)],
+    "v": [("cache_batch", "cache_seq", "cache_kv_heads", None)],
+    "k_scale": [("cache_batch", "cache_seq", "cache_kv_heads", None)],
+    "v_scale": [("cache_batch", "cache_seq", "cache_kv_heads", None)],
+    "kpos": [(None,)],
+    "conv": [("cache_batch", None, "act_inner")],
+    "h": [("cache_batch", "act_inner")],
+    "ssm": [("cache_batch", "act_inner", None, None)],   # (B,H,P,N): H on model
+}
+
+
+def cache_shardings(cache: Any, rules: ShardingRules) -> Any:
+    def fn(path, leaf):
+        names = _path_names(path)
+        cands = _CACHE.get(names[-1], [(None,) * leaf.ndim])
+        if "scan" in names:
+            cands = [(None,) + tuple(c) for c in cands]
+        return NamedSharding(rules.mesh, pick_spec(leaf.shape, cands, rules))
+
+    return jax.tree_util.tree_map_with_path(fn, cache)
+
+
+def batch_shardings(model, shape, rules: ShardingRules) -> Any:
+    names = model.batch_spec_names(shape)
+    specs = model.input_specs(shape)
+    return {k: NamedSharding(rules.mesh,
+                             pick_spec(specs[k].shape, [v], rules))
+            for k, v in names.items()}

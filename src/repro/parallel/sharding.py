@@ -1,0 +1,172 @@
+"""Logical-axis sharding rules.
+
+Model code annotates arrays with *logical* axis names; this module maps them
+to mesh axes for a given mesh + plan.  The mapping is where the per-arch
+divisibility decisions live (e.g. qwen2's 28 heads on a 16-way TP axis), and
+where the plan's FSDP / sequence-parallel genes take effect.
+
+Mesh axes:
+  single-pod   (data=16, model=16)
+  multi-pod    (pod=2, data=16, model=16)   # batch shards over (pod, data)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, PlanConfig
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    batch: tuple[str, ...]      # ("pod","data") or ("data",)
+    model: str = "model"
+
+
+def mesh_axes(mesh: Mesh) -> MeshAxes:
+    names = mesh.axis_names
+    if "pod" in names:
+        return MeshAxes(batch=("pod", "data"))
+    return MeshAxes(batch=("data",))
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """Resolved logical-axis → mesh-axis mapping for (arch, mesh, plan)."""
+
+    rules: dict[str, Optional[tuple[str, ...]]]
+    mesh: Mesh
+
+    def spec(self, *names: Optional[str]) -> P:
+        out = []
+        used: set[str] = set()
+        for n in names:
+            axes = self.rules.get(n) if n is not None else None
+            if axes:
+                axes = tuple(a for a in axes if a not in used)
+            if axes:
+                used.update(axes)
+                out.append(axes)
+            else:
+                out.append(None)
+        return P(*out)
+
+    def sharding(self, *names: Optional[str]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*names))
+
+
+def head_strategy(cfg: ArchConfig, tp: int) -> str:
+    """Pick which head axis carries TP (DESIGN.md §3 divisibility table).
+
+    'kv'    — shard the kv-head axis (grouped einsum, kv stays sharded)
+    'group' — shard the q-per-kv group axis (kv replicated along TP)
+    'flat'  — shard flattened q heads (GSPMD pads), kv replicated
+    """
+    if cfg.n_heads == 0:
+        return "none"
+    if cfg.n_kv_heads % tp == 0:
+        return "kv"
+    if cfg.q_per_kv % tp == 0:
+        return "group"
+    return "flat"
+
+
+def make_rules(cfg: ArchConfig, mesh: Mesh, plan: PlanConfig) -> ShardingRules:
+    ax = mesh_axes(mesh)
+    if not plan.use_tp:
+        # pure data parallel: the model axis joins batch sharding; weights
+        # replicate across 'model' (ZeRO still shards them over the full
+        # batch product when fsdp is on)
+        batch = ax.batch + ("model",)
+        fsdp = batch if plan.fsdp else None
+        rules: dict[str, Optional[tuple[str, ...]]] = {
+            "batch": batch,
+            "seq": None, "seq_sharded": None,
+            "act_embed": None, "act_ff": None, "act_heads": None,
+            "act_kv_heads": None, "act_group": None, "act_experts": None,
+            "act_inner": None,
+            "embed": fsdp, "vocab": None, "ff": None, "heads": None,
+            "kv_heads": None, "group": None, "experts": None,
+            "expert_ff": None, "inner": None, "conv_k": None, "stack": None,
+            "head_dim": None,
+            "cache_batch": batch, "cache_seq": None, "cache_kv_heads": None,
+        }
+        return ShardingRules(rules=rules, mesh=mesh)
+
+    tp = _axis_size(mesh, "model")
+    batch = ax.batch
+    model = ("model",)
+    fsdp: Optional[tuple[str, ...]] = batch if plan.fsdp else None
+
+    hs = head_strategy(cfg, tp)
+    rules: dict[str, Optional[tuple[str, ...]]] = {
+        # activations
+        "batch": batch,
+        "seq": None,
+        "seq_sharded": model if plan.seq_shard else None,   # SP residual stream
+        "act_embed": None,
+        "act_ff": model,
+        "act_heads": model if hs == "flat" else None,
+        "act_kv_heads": model if hs == "kv" else None,
+        "act_group": model if hs == "group" else None,
+        "act_experts": model if plan.shard_moe_experts else None,
+        "act_inner": model,            # mamba2 / rglru inner width
+        # weights: 2D (fsdp × tensor) sharding
+        "embed": fsdp,                 # d_model rows of big matrices
+        "vocab": model,                # vocab columns (GSPMD pads uneven)
+        "ff": model,
+        "heads": model if hs in ("flat",) else None,
+        "kv_heads": model if hs == "kv" else None,
+        "group": model if hs == "group" else None,
+        "experts": model if plan.shard_moe_experts else None,
+        "expert_ff": None,             # expert d_ff stays local under EP
+        "inner": model,
+        "conv_k": None,
+        "head_dim": None,
+        "stack": None,                 # stacked-layer leading axis
+        # kv-cache storage
+        "cache_batch": batch,
+        "cache_seq": model if hs != "kv" else None,   # seq-shard cache when heads can't take TP
+        "cache_kv_heads": model if hs == "kv" else None,
+    }
+    return ShardingRules(rules=rules, mesh=mesh)
+
+
+# Convenience wrappers -------------------------------------------------------
+
+
+def logical(rules: ShardingRules, names: Sequence[Optional[str]]):
+    return rules.sharding(*names)
+
+
+def spec_for(rules: ShardingRules, names: Sequence[Optional[str]]) -> P:
+    return rules.spec(*names)
+
+
+def constrain(x, rules: ShardingRules, *names: Optional[str]):
+    """with_sharding_constraint by logical names; drops axes that do not
+    divide the dimension evenly (no-op off-mesh)."""
+    spec = rules.spec(*names)
+    sizes = dict(zip(rules.mesh.axis_names, rules.mesh.devices.shape))
+    legal = []
+    for dim, part in zip(x.shape, tuple(spec) + (None,) * x.ndim):
+        if part is None:
+            legal.append(None)
+            continue
+        axes = (part,) if isinstance(part, str) else tuple(part)
+        k = 1
+        for a in axes:
+            k *= sizes[a]
+        legal.append(part if dim % k == 0 else None)
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh,
+                                                                 P(*legal)))
+    except (ValueError, RuntimeError):
+        return x

@@ -1,0 +1,115 @@
+"""Serving engine: prefill / decode steps + a batched request scheduler.
+
+``make_prefill`` / ``make_decode_step`` are the lowered units (the dry-run
+compiles these for the decode/prefill shapes).  ``ServeLoop`` is a simple
+continuous-batching scheduler: fixed decode batch, slots freed on EOS/length
+and refilled from the queue, greedy sampling.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+from repro.parallel.sharding import ShardingRules
+
+
+def make_prefill(model: Model, rules: Optional[ShardingRules] = None):
+    def prefill(params, batch, cache):
+        return model.prefill(params, batch, cache, rules)
+    return prefill
+
+
+def make_decode_step(model: Model, rules: Optional[ShardingRules] = None):
+    def decode_step(params, batch, cache):
+        return model.decode_step(params, batch, cache, rules)
+    return decode_step
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (P,) int32
+    max_new: int
+    out: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeLoop:
+    """Continuous-batching greedy decoder over a fixed slot batch."""
+
+    def __init__(self, model: Model, params, batch_slots: int, max_seq: int,
+                 eos_id: int = 1):
+        self.model = model
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.eos = eos_id
+        self.queue: list[Request] = []
+        self.active: list[Optional[Request]] = [None] * batch_slots
+        self.cache = model.init_cache(batch_slots, max_seq)
+        self.pos = np.zeros(batch_slots, np.int32)
+        self._decode = jax.jit(make_decode_step(model))
+        self._tokens = np.zeros((batch_slots, 1), np.int32)
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _fill_slots(self):
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[i] = req
+                # teacher-forced sequential prefill through the decode path
+                # (single-slot prompts stay short in the examples; production
+                # prefill uses make_prefill on a full batch)
+                for t, tok in enumerate(req.prompt[:-1]):
+                    self._step_one(i, int(tok), t)
+                self.pos[i] = len(req.prompt) - 1
+                self._tokens[i, 0] = int(req.prompt[-1])
+
+    def _step_one(self, slot: int, token: int, pos: int):
+        toks = self._tokens.copy()
+        toks[slot, 0] = token
+        batch = {"tokens": jnp.asarray(toks),
+                 "pos": jnp.asarray(pos, jnp.int32)}
+        _, self.cache = self._decode(self.params, batch, self.cache)
+
+    def step(self) -> int:
+        """One decode step across all active slots. Returns #active."""
+        self._fill_slots()
+        if all(r is None for r in self.active):
+            return 0
+        pos = int(max(self.pos[i] for i, r in enumerate(self.active)
+                      if r is not None))
+        batch = {"tokens": jnp.asarray(self._tokens),
+                 "pos": jnp.asarray(pos, jnp.int32)}
+        logits, self.cache = self._decode(self.params, batch, self.cache)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        n_active = 0
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[i])
+            req.out.append(tok)
+            self.pos[i] += 1
+            self._tokens[i, 0] = tok
+            if tok == self.eos or len(req.out) >= req.max_new \
+                    or self.pos[i] >= self.max_seq - 1:
+                req.done = True
+                self.active[i] = None
+            else:
+                n_active += 1
+        return n_active
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        finished: list[Request] = []
+        for _ in range(max_steps):
+            if not self.queue and all(r is None for r in self.active):
+                break
+            self.step()
+        return finished

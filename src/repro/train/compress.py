@@ -1,0 +1,76 @@
+"""Gradient compression: int8 block quantization with error feedback.
+
+Distributed-optimization trick for the DP reduction: gradients are quantized
+to int8 (block-wise absmax scales) *before* the cross-replica sum, with the
+quantization residual carried in an error-feedback buffer so the scheme stays
+unbiased over steps (1-bit-Adam/EF-SGD style).  ``compressed_psum`` is the
+shard_map-able collective; ``ef_compress_tree`` is the pytree numerics path
+used inside the train step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 512
+
+
+def quantize(x):
+    """f32 array -> (int8 blocks, f32 scales). Lossy."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q, scale, shape, size):
+    x = (q.astype(jnp.float32) * scale).reshape(-1)[:size]
+    return x.reshape(shape)
+
+
+def ef_compress(g, err):
+    """One error-feedback round: returns (decompressed g_hat, new_err).
+
+    Uses a PER-TENSOR scale (elementwise quantize, no reshape): the
+    block-quantizer's flatten would break GSPMD sharding and force a full
+    all-gather of each sharded gradient (observed: +146 GiB of gathers on
+    the MoE expert grads — EXPERIMENTS.md §Perf fleet sweep).  Error
+    feedback absorbs the coarser scale over steps.
+    """
+    corrected = g.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(corrected)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(corrected / scale), -127, 127)
+    ghat = q * scale
+    return ghat.astype(g.dtype), corrected - ghat
+
+
+def ef_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress_tree(grads, err_tree):
+    out = jax.tree.map(ef_compress, grads, err_tree)
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    ghat = jax.tree.unflatten(treedef, [x[0] for x in flat])
+    err = jax.tree.unflatten(treedef, [x[1] for x in flat])
+    return ghat, err
+
+
+def compressed_psum(x, axis_name: str):
+    """int8-on-the-wire psum for use under shard_map.
+
+    Quantizes locally, sums the int8 payloads (widened to int32 to avoid
+    overflow across replicas), and dequantizes with psum'd scales.  Wire
+    bytes: 1B/elem + scales, vs 4B/elem for the f32 psum.
+    """
+    q, s = quantize(x)
+    qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    # each replica's blocks share this replica's scale layout; sum of
+    # per-replica dequantized values == dequantize(sum) only with a common
+    # scale, so we conservatively reduce with the max scale.
+    smax = jax.lax.pmax(s, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    approx = (qsum.astype(jnp.float32) * smax).reshape(-1)[: x.size]
+    return (approx / n).reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,179 @@
+"""Optimizers: AdamW, Adafactor (factored second moments), int8-state Adam.
+
+Pure pytree functions — state shards exactly like the parameters, so FSDP
+sharding of the weights automatically ZeRO-shards the optimizer state.
+
+Adafactor is the memory-critical choice for the 405B-class configs: the
+second-moment estimate of an (m, n) matrix is stored as an (m,) row vector +
+(n,) column vector instead of (m, n).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        newp = p.astype(jnp.float32) - lr * (u + wd * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    newp = jax.tree.unflatten(treedef, [x[0] for x in flat])
+    newm = jax.tree.unflatten(treedef, [x[1] for x in flat])
+    newv = jax.tree.unflatten(treedef, [x[2] for x in flat])
+    return newp, {"m": newm, "v": newv, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern) — factored v, no first moment
+# ---------------------------------------------------------------------------
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 8 and p.shape[-2] >= 8
+
+
+def adafactor_init(params):
+    def st(p):
+        if _factored(p):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return {"v": jax.tree.map(st, params,
+                              is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(params, grads, state, lr, eps=1e-30, clip=1.0, wd=0.0):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - t ** -0.8
+
+    def upd(p, g, s):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + eps
+        if _factored(p):
+            vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            rfac = jax.lax.rsqrt(vr / jnp.mean(vr, axis=-1, keepdims=True)
+                                 + eps)
+            cfac = jax.lax.rsqrt(vc + eps)
+            u = g32 * rfac[..., None] * cfac[..., None, :]
+            news = {"vr": vr, "vc": vc}
+        else:
+            v = beta * s["v"] + (1 - beta) * g2
+            u = g32 * jax.lax.rsqrt(v + eps)
+            news = {"v": v}
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / clip)
+        newp = p.astype(jnp.float32) - lr * (u + wd * p.astype(jnp.float32))
+        return newp.astype(p.dtype), news
+
+    is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    out = jax.tree.map(upd, params, grads, state["v"], is_leaf=None)
+    flat, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    newp = jax.tree.unflatten(treedef, [x[0] for x in flat])
+    news = jax.tree.unflatten(treedef, [x[1] for x in flat])
+    return newp, {"v": news, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# int8-quantized Adam state (distributed-optimization trick: 4x optimizer
+# memory reduction; block-wise absmax quantization with f32 scales)
+# ---------------------------------------------------------------------------
+
+_QBLOCK = 256
+
+
+def _q8(x):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % _QBLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, _QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dq8(s, shape, size):
+    x = (s["q"].astype(jnp.float32) * s["scale"]).reshape(-1)[:size]
+    return x.reshape(shape)
+
+
+def adam8_init(params):
+    return {"m": jax.tree.map(lambda p: _q8(jnp.zeros_like(p, jnp.float32)),
+                              params),
+            "v": jax.tree.map(lambda p: _q8(jnp.zeros_like(p, jnp.float32)),
+                              params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adam8_update(params, grads, state, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.1):
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    c1, c2 = 1.0 - b1 ** t, 1.0 - b2 ** t
+
+    def upd(p, g, mq, vq):
+        g32 = g.astype(jnp.float32)
+        m = b1 * _dq8(mq, p.shape, p.size) + (1 - b1) * g32
+        v = b2 * _dq8(vq, p.shape, p.size) + (1 - b2) * jnp.square(g32)
+        u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+        newp = p.astype(jnp.float32) - lr * (u + wd * p.astype(jnp.float32))
+        return newp.astype(p.dtype), _q8(m), _q8(v)
+
+    outs = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    flat, treedef = jax.tree.flatten(outs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    newp = jax.tree.unflatten(treedef, [x[0] for x in flat])
+    newm = jax.tree.unflatten(treedef, [x[1] for x in flat])
+    newv = jax.tree.unflatten(treedef, [x[2] for x in flat])
+    return newp, {"m": newm, "v": newv, "step": step}
+
+
+# ---------------------------------------------------------------------------
+# Dispatch
+# ---------------------------------------------------------------------------
+
+OPTIMIZERS = {
+    "adamw": (adamw_init, adamw_update),
+    "adafactor": (adafactor_init, adafactor_update),
+    "adam8": (adam8_init, adam8_update),
+}
+
+
+def opt_init(cfg: ArchConfig, params) -> Any:
+    return OPTIMIZERS[cfg.optimizer][0](params)
+
+
+def opt_update(cfg: ArchConfig, params, grads, state):
+    return OPTIMIZERS[cfg.optimizer][1](params, grads, state,
+                                        lr=cfg.learning_rate)

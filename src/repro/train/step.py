@@ -1,0 +1,107 @@
+"""Train step: microbatch gradient accumulation, clipping, optimizer update.
+
+The step is a pure function of (params, opt_state, batch) — jit/pjit it with
+donated params/opt_state.  Plan genes consumed here: ``microbatches``
+(accumulation), ``grad_compress`` (int8 error-feedback), ``fused_grad_reduce``
+(constrain accumulated grads to the param sharding so GSPMD batches the
+cross-replica reduction once per step instead of per-microbatch — the paper's
+transfer-batching analogue at the gradient level).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import Model
+from repro.parallel.sharding import ShardingRules
+from repro.train import compress as C
+from repro.train import optimizer as O
+
+CLIP_NORM = 1.0
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def make_opt_init(model: Model):
+    def opt_init(params):
+        state = O.opt_init(model.cfg, params)
+        if model.plan.grad_compress == "int8_ef":
+            state["ef"] = C.ef_init(params)
+        return state
+    return opt_init
+
+
+def make_train_step(model: Model, rules: Optional[ShardingRules] = None):
+    cfg, plan = model.cfg, model.plan
+    n_micro = plan.microbatches
+    acc_dt = jnp.dtype(plan.accum_dtype)
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb, rules)
+
+    def _grad_shardings(params):
+        if rules is None:
+            return None
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.parallel.param_sharding import param_spec_tree
+        specs = param_spec_tree(params, rules)
+        return jax.tree.map(lambda s: NamedSharding(rules.mesh, s), specs,
+                            is_leaf=lambda x: isinstance(x, PartitionSpec))
+
+    def _pin(tree, shardings):
+        if shardings is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, shardings)
+
+    def train_step(params, opt_state, batch):
+        gsh = _grad_shardings(params)
+        if n_micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = _pin(grads, gsh)
+        else:
+            def resh(x):
+                return x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+
+            mbs = jax.tree.map(resh, batch)
+            g0 = _pin(jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt),
+                                   params), gsh)
+
+            def body(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                gsum = _pin(jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt), gsum, g), gsh)
+                return (gsum, lsum + l), None
+
+            (grads, loss), _ = jax.lax.scan(body, (g0, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = loss / n_micro
+            metrics = {}
+
+        if plan.fused_grad_reduce and rules is not None:
+            grads = _pin(grads, gsh)
+
+        ef_state = None
+        if plan.grad_compress == "int8_ef":
+            grads, ef_state = C.ef_compress_tree(grads, opt_state["ef"])
+
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, CLIP_NORM / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+
+        core_state = {k: v for k, v in opt_state.items() if k != "ef"}
+        new_params, new_state = O.opt_update(cfg, params, grads, core_state)
+        if ef_state is not None:
+            new_state["ef"] = ef_state
+        out_metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_state, out_metrics
+
+    return train_step

@@ -1,0 +1,12 @@
+import jax
+import pytest
+
+# NOTE: no xla_force_host_platform_device_count here — tests must see the
+# real (single) device; only launch/dryrun.py forces 512.
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

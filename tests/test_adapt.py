@@ -1,0 +1,99 @@
+"""The seven-step environment-adaptation flow (paper Fig. 1)."""
+import pytest
+
+from repro.configs import get_config
+from repro.core.adapt import (AdaptationReport, CostModel, ReconfigPolicy,
+                              Reconfigurator, adapt, adjust_placement,
+                              adjust_resources)
+from repro.core.destinations import Requirement
+from repro.core.ga import GAConfig
+
+
+def test_adapt_full_flow_train():
+    cfg = get_config("qwen2-7b")
+    rep = adapt(cfg, "train_4k",
+                requirement=Requirement(max_seconds=1e9),
+                ga=GAConfig(population=4, generations=2),
+                slices=(64, 256))
+    assert len(rep.census) >= 3                      # step 1
+    assert "attn_impl" in rep.genes                  # step 2
+    assert rep.selection.chosen is not None          # step 3
+    assert rep.slices and rep.chips in (64, 256)     # step 4
+    assert rep.placement["pods"] >= 1                # step 5
+    assert rep.reconfigurator is not None            # step 7
+    assert rep.plan is not None
+
+
+def test_resource_adjustment_cost_tradeoff():
+    """More chips: faster but more chip-seconds; the §3.3 cost model must
+    produce a non-trivial ranking (not always max chips)."""
+    cfg = get_config("mamba2-1.3b")
+    choices = adjust_resources(cfg, "train_4k", cfg.plan,
+                               slices=(64, 128, 256, 512))
+    assert len(choices) == 4
+    by_chips = {c.chips: c for c in choices}
+    # time falls (or stays) with chips
+    assert by_chips[512].measurement.seconds \
+        <= by_chips[64].measurement.seconds * 1.05
+    # best-by-cost is returned first and is a valid measurement
+    assert choices[0].measurement.ok
+    # decode is latency-floored by per-collective launches: a tiny SSM
+    # must NOT want the biggest slice there
+    dec = adjust_resources(cfg, "decode_32k", cfg.plan,
+                           slices=(64, 128, 256, 512))
+    assert dec[0].chips < 512
+
+
+def test_resource_adjustment_respects_requirement():
+    cfg = get_config("qwen2-7b")
+    fast = adjust_resources(cfg, "train_4k", cfg.plan,
+                            slices=(64, 512),
+                            requirement=Requirement(max_seconds=2.0))
+    # any slice meeting the SLO sorts before those that don't
+    if not fast[0].measurement.ok:
+        pytest.skip("no slice satisfies")
+    assert fast[0].measurement.seconds <= 2.0 or all(
+        c.measurement.seconds > 2.0 for c in fast)
+
+
+def test_placement_multi_pod_threshold():
+    assert adjust_placement(256)["multi_pod"] is False
+    p = adjust_placement(512)
+    assert p["multi_pod"] is True and p["pods"] == 2
+
+
+def test_reconfigurator_triggers_on_degradation():
+    cfg = get_config("qwen2-7b")
+    r = Reconfigurator(cfg, "train_4k",
+                       policy=ReconfigPolicy(degrade_factor=1.5, window=4,
+                                             cooldown_steps=0),
+                       ga=GAConfig(population=4, generations=1))
+    plan = cfg.plan
+    for i in range(4):
+        assert r.observe(i, 1.0, plan) is None       # stable baseline
+    new = r.observe(5, 3.0, plan)                    # 3x degradation
+    assert new is not None and r.events
+    assert r.events[0]["step"] == 5
+
+
+def test_reconfigurator_cooldown():
+    cfg = get_config("qwen2-7b")
+    r = Reconfigurator(cfg, "train_4k",
+                       policy=ReconfigPolicy(degrade_factor=1.2, window=2,
+                                             cooldown_steps=1000),
+                       ga=GAConfig(population=4, generations=1))
+    for i in range(2):
+        r.observe(i, 1.0, cfg.plan)
+    assert r.observe(3, 5.0, cfg.plan) is not None
+    r.observe(4, 1.0, cfg.plan)
+    r.observe(5, 1.0, cfg.plan)
+    assert r.observe(6, 5.0, cfg.plan) is None       # cooldown holds
+
+
+def test_cost_model_components():
+    from repro.core.verifier import Measurement
+    m = Measurement(seconds=2.0, watts=100.0, energy_j=2.0 * 100 * 256)
+    cm = CostModel(hw_rate=1.0, energy_rate=0.0)
+    assert cm.step_cost(m, 256) == pytest.approx(512.0)
+    cm2 = CostModel(hw_rate=0.0, energy_rate=1.0)
+    assert cm2.step_cost(m, 256) == pytest.approx(m.energy_j)

@@ -1,0 +1,207 @@
+"""Tests for the paper's contribution: fitness, GA, narrowing, destinations,
+power model, verifier (unit + property)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import SHAPES, get_config
+from repro.core import (GAConfig, PowerModel, Verifier, V5E, fitness,
+                        narrow_candidates, run_ga, select_destination)
+from repro.core.destinations import Requirement
+from repro.core.fitness import TIMEOUT_PENALTY_S, fitness_time_only
+from repro.core.plan import GENES, PlanGenome
+from repro.core.verifier import penalty_measurement
+
+
+# ---------------------------------------------------------------------------
+# fitness (paper §3.1 / §4.1)
+# ---------------------------------------------------------------------------
+
+def test_fitness_formula():
+    # (t)^-1/2 (W)^-1/2 exactly
+    assert fitness(4.0, 25.0) == pytest.approx((4.0 ** -0.5) * (25.0 ** -0.5))
+
+
+def test_fitness_prefers_fast_and_low_power():
+    assert fitness(1.0, 100.0) > fitness(2.0, 100.0)
+    assert fitness(1.0, 100.0) > fitness(1.0, 150.0)
+
+
+def test_timeout_penalty_is_1000s():
+    m = penalty_measurement("boom", PowerModel(V5E))
+    assert m.seconds == TIMEOUT_PENALTY_S
+    assert not m.ok
+
+
+@settings(max_examples=30, deadline=None)
+@given(t1=st.floats(0.01, 100), t2=st.floats(0.01, 100),
+       w=st.floats(1, 500))
+def test_fitness_monotone_in_time(t1, t2, w):
+    if t1 < t2:
+        assert fitness(t1, w) >= fitness(t2, w)
+
+
+def test_paper_mriq_energy_ordering():
+    """Fig. 5: CPU 14 s @121 W vs FPGA 2 s @111 W -> offload must win."""
+    assert fitness(2.0, 111.0) > fitness(14.0, 121.0)
+    # and with time-only fitness as well (offload dominates both axes)
+    assert fitness_time_only(2.0, 111.0) > fitness_time_only(14.0, 121.0)
+
+
+# ---------------------------------------------------------------------------
+# power model
+# ---------------------------------------------------------------------------
+
+def test_power_model_calibration():
+    pm = PowerModel(V5E)
+    # fully-roofline chip ~ 160 W, idle ~ 65 W (DESIGN.md §6)
+    w_full = pm.watts(V5E.peak_flops, V5E.hbm_bw, 0, 1.0, 1)
+    assert 120 < w_full < 220, w_full
+    w_idle = pm.watts(0, 0, 0, 1.0, 1)
+    assert w_idle == pytest.approx(65.0)
+
+
+def test_roofline_terms_scale_with_chips():
+    pm = PowerModel(V5E)
+    assert pm.compute_term(1e15, 256) == pytest.approx(
+        pm.compute_term(1e15, 512) * 2)
+
+
+# ---------------------------------------------------------------------------
+# genome
+# ---------------------------------------------------------------------------
+
+def test_genome_applicability():
+    ssm = get_config("mamba2-1.3b")
+    names = PlanGenome.gene_names(ssm, "train")
+    assert "attn_impl" not in names          # attention-free arch
+    assert "ssm_impl" in names
+    dense = get_config("qwen2-7b")
+    names = PlanGenome.gene_names(dense, "train")
+    assert "attn_impl" in names and "ssm_impl" not in names
+    assert "remat" not in PlanGenome.gene_names(dense, "decode")
+
+
+def test_genome_roundtrip_and_ops():
+    cfg = get_config("qwen2-7b")
+    rng = np.random.default_rng(0)
+    g = PlanGenome.random(cfg, "train", rng)
+    plan = g.to_plan()
+    g2 = PlanGenome.from_plan(cfg, "train", plan)
+    assert g.key() == g2.key()
+    child = g.crossover(g2.mutate(rng, 1.0), rng)
+    assert set(child.alleles) == set(g.alleles)
+
+
+# ---------------------------------------------------------------------------
+# GA (paper §3.1)
+# ---------------------------------------------------------------------------
+
+def test_ga_improves_over_baseline():
+    cfg = get_config("qwen2-7b")
+    v = Verifier(cfg, "train_4k", n_chips=256, mode="analytic")
+    base = v.measure(PlanGenome.from_plan(cfg, "train", cfg.plan))
+    res = run_ga(cfg, "train", v, GAConfig(population=8, generations=5,
+                                           seed=1))
+    assert res.best_measurement.fitness() >= base.fitness()
+    assert res.n_trials <= 8 * 6 + 8          # caching bounds trials
+    assert len(res.history) == 5
+
+
+def test_ga_power_fitness_vs_time_only():
+    """beta=0 (previous papers) vs beta=1/2 (this paper): the power-aware
+    winner must not consume more energy than the time-only winner."""
+    cfg = get_config("stablelm-12b")
+    v = Verifier(cfg, "train_4k", n_chips=256, mode="analytic")
+    r_time = run_ga(cfg, "train", v,
+                    GAConfig(population=10, generations=6, seed=3,
+                             alpha=1.0, beta=0.0))
+    r_power = run_ga(cfg, "train", v,
+                     GAConfig(population=10, generations=6, seed=3,
+                              alpha=0.5, beta=0.5))
+    assert (r_power.best_measurement.energy_j
+            <= r_time.best_measurement.energy_j * 1.05)
+
+
+def test_ga_cache_dedupes_patterns():
+    cfg = get_config("granite-20b")
+    v = Verifier(cfg, "train_4k", n_chips=256, mode="analytic")
+    run_ga(cfg, "train", v, GAConfig(population=6, generations=8, seed=0))
+    assert v.n_trials == len(v.cache)
+
+
+# ---------------------------------------------------------------------------
+# narrowing (paper §3.2)
+# ---------------------------------------------------------------------------
+
+def test_narrowing_funnel_top4():
+    cfg = get_config("llama3-405b")
+    rep = narrow_candidates(cfg, SHAPES["train_4k"], top_k=4, combine=False)
+    assert 1 <= len(rep.candidates) <= 4
+    assert rep.considered                      # census ran
+    names = [c.name for c in rep.candidates]
+    assert "mlp" in names or "attn" in names   # the hot sites
+
+
+def test_narrowing_resource_precheck_rejects_oversized_vmem():
+    """llama3's d_ff panel exceeds VMEM -> the FPGA-style resource
+    pre-check must reject the fused-MLP kernel before any measurement."""
+    cfg = get_config("llama3-405b")
+    rep = narrow_candidates(cfg, SHAPES["train_4k"], top_k=4)
+    rejected = {site: reason for site, reason in rep.rejected}
+    if "mlp" in rejected:
+        assert "VMEM" in rejected["mlp"]
+    else:   # mlp survived => its working set must fit
+        mlp = [c for c in rep.considered if c["site"] == "mlp"][0]
+        assert mlp["vmem_ws"] <= 16 * 2**20
+
+
+def test_narrowing_combinations():
+    cfg = get_config("qwen2-7b")
+    rep = narrow_candidates(cfg, SHAPES["train_4k"], combine=True)
+    combos = [c for c in rep.candidates if "+" in c.name]
+    if len([c for c in rep.candidates if "+" not in c.name]) >= 2:
+        assert combos, "paper §3.2 requires combination patterns"
+
+
+def test_narrowing_ssm_arch_has_no_attention_candidates():
+    cfg = get_config("mamba2-1.3b")
+    rep = narrow_candidates(cfg, SHAPES["train_4k"])
+    assert all("attn" not in c.name for c in rep.candidates)
+
+
+# ---------------------------------------------------------------------------
+# mixed destinations (paper §3.3)
+# ---------------------------------------------------------------------------
+
+def test_destination_early_exit():
+    cfg = get_config("qwen2-7b")
+    v = Verifier(cfg, "train_4k", n_chips=256, mode="analytic")
+    sel = select_destination(cfg, "train", v,
+                             Requirement(max_seconds=1e9),
+                             GAConfig(population=4, generations=2))
+    assert sel.early_exit and "xla_default" in sel.early_exit
+    assert len(sel.stages) == 1                # GPU/FPGA rungs skipped
+
+
+def test_destination_full_ladder():
+    cfg = get_config("qwen2-7b")
+    v = Verifier(cfg, "train_4k", n_chips=256, mode="analytic")
+    sel = select_destination(cfg, "train", v,
+                             Requirement(max_seconds=1e-9),  # unsatisfiable
+                             GAConfig(population=6, generations=3, seed=2))
+    assert [s["stage"] for s in sel.stages] == ["xla_default", "xla_tuned",
+                                                "pallas"]
+    assert sel.chosen is not None
+    fits = [s["fitness"] for s in sel.stages]
+    assert sel.chosen.measurement.fitness() >= max(fits[0], 1e-12)
+
+
+def test_verifier_oom_penalty():
+    """A plan that cannot fit must receive the 1000 s penalty, not crash."""
+    cfg = get_config("llama3-405b")
+    v = Verifier(cfg, "train_4k", n_chips=4, mode="analytic")  # tiny slice
+    m = v.measure(PlanGenome.from_plan(cfg, "train", cfg.plan))
+    assert not m.ok and m.seconds == TIMEOUT_PENALTY_S

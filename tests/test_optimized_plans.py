@@ -1,0 +1,46 @@
+"""The fleet-optimized plan registry (§Perf beyond-paper) stays sane."""
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.configs.optimized import _PURE_DP, optimized_plan
+from repro.core.verifier import Verifier
+
+ARCHS = [a for a in list_archs() if not a.startswith("tiny")]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_optimized_plan_measures_no_worse(arch):
+    """On the analytic verifier, the optimized plan must never be worse
+    than the baseline for any runnable (arch, shape)."""
+    cfg = get_config(arch)
+    for shape_name, shape in SHAPES.items():
+        if shape_name in cfg.skip_shapes:
+            continue
+        v = Verifier(cfg, shape_name, n_chips=256, mode="analytic")
+        base = v.measure_plan(cfg.plan, shape.kind)
+        opt = v.measure_plan(optimized_plan(arch, shape.kind), shape.kind)
+        assert opt.ok, (arch, shape_name, opt.error)
+        assert opt.seconds <= base.seconds * 1.02, (arch, shape_name)
+        assert opt.energy_j <= base.energy_j * 1.05, (arch, shape_name)
+
+
+def test_moe_trains_keep_expert_parallelism():
+    """Regression guard for the 329 GiB dispatch blow-up: MoE train plans
+    must never fold the model axis into DP."""
+    for arch in ("moonshot-v1-16b-a3b", "granite-moe-1b-a400m"):
+        assert optimized_plan(arch, "train").use_tp is True
+
+
+def test_pure_dp_only_for_single_chip_weights():
+    """use_tp=False requires bf16 weights to fit one chip."""
+    for arch in _PURE_DP:
+        cfg = get_config(arch)
+        assert cfg.param_count() * 2 < 15 * 2**30, arch
+
+
+def test_decode_plans_quantize_cache():
+    for arch in ("llama3-405b", "qwen2-7b", "stablelm-12b"):
+        assert optimized_plan(arch, "decode").kv_cache_dtype == "int8"
+    # attention-free arch keeps its (absent) cache settings harmless
+    p = optimized_plan("mamba2-1.3b", "decode")
+    assert p.use_tp is False

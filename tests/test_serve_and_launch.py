@@ -1,0 +1,73 @@
+"""Serving loop end-to-end + launch helpers."""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import Model
+from repro.serve.engine import Request, ServeLoop
+
+
+def test_serve_loop_continuous_batching(rng_key):
+    # lock the backend to the real single device BEFORE touching launch
+    assert len(jax.devices()) >= 1
+    cfg = get_config("tiny-test")
+    model = Model(cfg)
+    params = model.init(rng_key)
+    loop = ServeLoop(model, params, batch_slots=2, max_seq=64)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(4):                      # more requests than slots
+        prompt = rng.integers(2, cfg.vocab_size, size=5).astype(np.int32)
+        r = Request(rid=i, prompt=prompt, max_new=6)
+        reqs.append(r)
+        loop.submit(r)
+    for _ in range(200):
+        if not loop.queue and all(s is None for s in loop.active):
+            break
+        loop.step()
+    assert all(r.done for r in reqs)
+    assert all(1 <= len(r.out) <= 6 for r in reqs)
+    assert all(0 <= t < cfg.vocab_size for r in reqs for t in r.out)
+
+
+def test_microbatch_clamp():
+    jax.devices()                           # lock backend first
+    from repro.configs import SHAPES
+    from repro.launch.dryrun import _clamp_microbatches
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+
+        class devices:
+            shape = (16, 16)
+
+    cfg = get_config("qwen2-7b")
+    shape = SHAPES["train_4k"]              # global_batch 256
+    # TP on: 16 batch ways -> per-shard 16 -> mb 4 stays
+    assert _clamp_microbatches(cfg.plan.replace(microbatches=4),
+                               shape, FakeMesh) == 4
+    # TP off: 256 ways -> per-shard 1 -> mb clamps to 1
+    assert _clamp_microbatches(
+        cfg.plan.replace(microbatches=8, use_tp=False), shape, FakeMesh) == 1
+    # non-divisor clamps down to a divisor
+    assert _clamp_microbatches(cfg.plan.replace(microbatches=5),
+                               shape, FakeMesh) == 4
+
+
+def test_input_specs_cover_all_shapes():
+    from repro.configs import SHAPES
+    for arch in ("qwen2-7b", "hubert-xlarge", "internvl2-76b",
+                 "mamba2-1.3b"):
+        cfg = get_config(arch)
+        model = Model(cfg)
+        for name, shape in SHAPES.items():
+            if name in cfg.skip_shapes:
+                continue
+            specs = model.input_specs(shape)
+            assert specs, (arch, name)
+            if shape.kind == "train":
+                assert "targets" in specs
+            if cfg.frontend == "audio_frames" and shape.kind != "decode":
+                assert "features" in specs
+            if shape.kind == "decode":
+                assert specs["tokens"].shape == (shape.global_batch, 1)

@@ -1,0 +1,270 @@
+"""Data pipeline, checkpointing, fault tolerance, compression, optimizers."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import checkpoint as C
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+from repro.ft.driver import (FailureInjector, InjectedFailure,
+                             StragglerPolicy, TrainDriver)
+from repro.models.model import Model
+from repro.train import compress as CP
+from repro.train import optimizer as O
+from repro.train.step import make_opt_init, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_host_sharded():
+    cfg = DataConfig(vocab_size=64, seq_len=32, global_batch=4)
+    a = SyntheticLM(cfg).batch(7)
+    b = SyntheticLM(cfg).batch(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # two hosts partition the global batch exactly
+    h0 = SyntheticLM(dataclasses.replace(cfg, host_id=0, n_hosts=2)).batch(7)
+    h1 = SyntheticLM(dataclasses.replace(cfg, host_id=1, n_hosts=2)).batch(7)
+    full = np.concatenate([h0["tokens"], h1["tokens"]])
+    np.testing.assert_array_equal(full, a["tokens"])
+
+
+def test_data_targets_shifted():
+    cfg = DataConfig(vocab_size=64, seq_len=32, global_batch=2)
+    b = SyntheticLM(cfg).batch(0)
+    assert b["tokens"].shape == (2, 32)
+    assert b["targets"].shape == (2, 32)
+
+
+def test_prefetcher_orders_steps():
+    cfg = DataConfig(vocab_size=64, seq_len=16, global_batch=2)
+    pf = Prefetcher(SyntheticLM(cfg), start_step=3)
+    s0, _ = pf.next()
+    s1, _ = pf.next()
+    pf.close()
+    assert (s0, s1) == (3, 4)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0):
+    k = jax.random.split(jax.random.PRNGKey(seed), 2)
+    return {"w": jax.random.normal(k[0], (8, 4)),
+            "b": {"x": jax.random.normal(k[1], (4,)),
+                  "step": jnp.asarray(3)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    C.save(tmp_path, 10, t, meta={"loss": 1.5})
+    assert C.latest_step(tmp_path) == 10
+    restored, meta = C.restore(tmp_path, 10, t)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b),
+                 t, restored)
+    assert meta["loss"] == 1.5
+
+
+def test_checkpoint_integrity_detects_corruption(tmp_path):
+    t = {"w": jnp.asarray(np.random.default_rng(0).normal(
+        size=(1024, 16)), jnp.float32)}      # data dominates the file
+    path = C.save(tmp_path, 1, t)
+    npz = path / "arrays.npz"
+    raw = bytearray(npz.read_bytes())
+    for frac in (0.3, 0.5, 0.7):             # hit the array payload
+        raw[int(len(raw) * frac)] ^= 0xFF
+    npz.write_bytes(bytes(raw))
+    with pytest.raises(Exception):
+        C.restore(tmp_path, 1, t)
+
+
+def test_checkpoint_torn_write_ignored(tmp_path):
+    t = _tree()
+    C.save(tmp_path, 5, t)
+    torn = tmp_path / "step_00000009"
+    torn.mkdir()
+    (torn / "manifest.json").write_text("{}")   # no COMMITTED marker
+    assert C.latest_step(tmp_path) == 5
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Save from one 'mesh', restore onto another sharding layout."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    t = {"w": jnp.arange(16.0).reshape(4, 4)}
+    C.save(tmp_path, 2, t)
+    mesh = Mesh(np.array(jax.devices()).reshape(1, 1), ("data", "model"))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored, _ = C.restore(tmp_path, 2, t, sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(t["w"]))
+    assert restored["w"].sharding == sh["w"]
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: failure injection + bit-exact restart
+# ---------------------------------------------------------------------------
+
+def _driver(tmp_path, fail_at=None, steps_ckpt=5):
+    cfg = get_config("tiny-test")
+    model = Model(cfg)
+    step = jax.jit(make_train_step(model))
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=16, global_batch=2)
+    return TrainDriver(model=model, train_step=step,
+                       opt_init=make_opt_init(model), data_cfg=data,
+                       ckpt_dir=str(tmp_path), ckpt_every=steps_ckpt,
+                       injector=FailureInjector(fail_at=fail_at or set()))
+
+
+def test_restart_resumes_exact_loss_curve(tmp_path):
+    ref = _driver(tmp_path / "ref").run(20)
+    # crash at step 13, then restart
+    d = _driver(tmp_path / "ft", fail_at={13})
+    with pytest.raises(InjectedFailure):
+        d.run(20)
+    d2 = _driver(tmp_path / "ft")
+    out = d2.run(20)
+    # resumed from step 10 checkpoint; steps 10..19 must match reference
+    ref_losses = {r["step"]: r["loss"] for r in ref["losses"]}
+    for r in out["losses"]:
+        assert r["loss"] == pytest.approx(ref_losses[r["step"]],
+                                          rel=1e-6), r["step"]
+
+
+def test_straggler_deadline_detection():
+    p = StragglerPolicy(deadline_factor=2.0, window=8)
+    for i in range(8):
+        assert not p.observe(i, 0.1)
+    assert p.observe(8, 0.5)          # 5x the median -> straggler
+    assert p.events and p.events[0]["step"] == 8
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_ef_compression_unbiased_over_steps():
+    """Error feedback: accumulated quantization error stays bounded and the
+    running sum of ghat tracks the running sum of g."""
+    rng = np.random.default_rng(0)
+    g_sum = np.zeros((64,), np.float32)
+    ghat_sum = np.zeros((64,), np.float32)
+    err = jnp.zeros((64,), jnp.float32)
+    for _ in range(50):
+        g = jnp.asarray(rng.normal(size=64), jnp.float32)
+        ghat, err = CP.ef_compress(g, err)
+        g_sum += np.asarray(g)
+        ghat_sum += np.asarray(ghat)
+    # residual bounded by one quantization step, not growing with steps
+    assert np.max(np.abs(g_sum - ghat_sum)) <= float(np.max(np.abs(err))) + 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.sampled_from([16, 100, 512, 700]))
+def test_quantize_roundtrip_error_bound(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=n) * 10, jnp.float32)
+    q, s = CP.quantize(x)
+    y = CP.dequantize(q, s, x.shape, x.size)
+    # absmax int8: error <= scale/2 per block
+    bound = float(jnp.max(s)) * 0.5 + 1e-6
+    assert float(jnp.max(jnp.abs(y - x))) <= bound
+
+
+def test_train_step_with_compression_converges_direction():
+    cfg = get_config("tiny-test")
+    cfg = dataclasses.replace(cfg,
+                              plan=cfg.plan.replace(grad_compress="int8_ef"))
+    model = Model(cfg)
+    step = jax.jit(make_train_step(model))
+    params = model.init(jax.random.PRNGKey(0))
+    opt = make_opt_init(model)(params)
+    assert "ef" in opt
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                  global_batch=4))
+    losses = []
+    for i in range(15):
+        b = {k: jnp.asarray(v) for k, v in data.batch(i).items()}
+        params, opt, m = step(params, opt, b)
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor", "adam8"])
+def test_optimizers_descend_quadratic(name):
+    cfg = dataclasses.replace(get_config("tiny-test"), optimizer=name,
+                              learning_rate=0.05)
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)),
+                         jnp.float32)
+    params = {"w": jnp.zeros((8, 8))}
+    init, update = O.OPTIMIZERS[name]
+    state = init(params)
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state = update(params, g, state, lr=0.05)
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_adafactor_memory_is_factored():
+    params = {"w": jnp.zeros((64, 32))}
+    st_ = O.adafactor_init(params)
+    leaf = st_["v"]["w"]
+    assert leaf["vr"].shape == (64,) and leaf["vc"].shape == (32,)
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    cfg = get_config("tiny-test")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
+                                  global_batch=4))
+    batch = {k: jnp.asarray(v) for k, v in data.batch(0).items()}
+
+    cfg1 = dataclasses.replace(cfg, plan=cfg.plan.replace(
+        microbatches=1, compute_dtype="float32"))
+    cfg4 = dataclasses.replace(cfg, plan=cfg.plan.replace(
+        microbatches=4, compute_dtype="float32"))
+    m1, m4 = Model(cfg1), Model(cfg4)
+    s1 = jax.jit(make_train_step(m1))
+    s4 = jax.jit(make_train_step(m4))
+    o1 = make_opt_init(m1)(params)
+    o4 = make_opt_init(m4)(params)
+    p1, _, met1 = s1(params, o1, batch)
+    p4, _, met4 = s4(params, o4, batch)
+    assert float(met1["loss"]) == pytest.approx(float(met4["loss"]),
+                                                rel=1e-4)
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))), p1, p4)
+    assert max(jax.tree.leaves(d)) < 5e-4
+
+
+def test_compressed_psum_under_shard_map():
+    """The int8-wire collective itself (shard_map path): approximates the
+    true mean within one quantization step."""
+    from functools import partial
+    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(256,)) * 5,
+                    jnp.float32)
+
+    @partial(shard_map, mesh=mesh, in_specs=P(None), out_specs=P(None))
+    def reduced(v):
+        return CP.compressed_psum(v, "data")
+
+    y = reduced(x)
+    q, s = CP.quantize(x)
+    assert float(jnp.max(jnp.abs(y - x))) <= float(jnp.max(s)) * 0.5 + 1e-5
