@@ -37,6 +37,20 @@ def _data(seed=0):
     return kx, ky, kz, phi, x, y, z
 
 
+def offload_phase_times(t_cpu: float) -> dict[str, float]:
+    """Offloaded-destination time model, per phase (shared with
+    bench_power): kernel roofline on one v5e core (trig-heavy VPU
+    workload, ~1/16 of MXU peak) + launch, batched host<->device
+    transfers, and the un-offloaded app remainder (same cost model as
+    examples/mriq_offload)."""
+    flops = 16.0 * N_VOX * N_K
+    in_bytes = (3 * N_VOX + 4 * N_K) * 4
+    out_bytes = 2 * N_VOX * 4
+    return {"kernel": flops / (V5E.peak_flops / 16.0) + 5e-6,
+            "transfer": (in_bytes + out_bytes) / 8e9,
+            "host_remainder": 0.02 * t_cpu}
+
+
 def run() -> list[str]:
     data = _data()
     # --- CPU-only destination: measured wall clock -------------------------
@@ -58,14 +72,7 @@ def run() -> list[str]:
                               *[d[:sub] for d in data[4:]])
     err = max(float(jnp.max(jnp.abs(qr_k - qr_r))),
               float(jnp.max(jnp.abs(qi_k - qi_r))))
-    # kernel roofline on one v5e core (trig-heavy VPU workload, ~1/16 of
-    # MXU peak) + launch + batched host<->device transfers + the
-    # un-offloaded app remainder (same cost model as examples/mriq_offload)
-    flops = 16.0 * N_VOX * N_K
-    in_bytes = (3 * N_VOX + 4 * N_K) * 4
-    out_bytes = 2 * N_VOX * 4
-    t_off = (flops / (V5E.peak_flops / 16.0) + 5e-6
-             + (in_bytes + out_bytes) / 8e9 + 0.02 * t_cpu)
+    t_off = sum(offload_phase_times(t_cpu).values())
 
     node = R740_ARRIA10
     e_cpu = t_cpu * node.p_cpu_active

@@ -9,6 +9,8 @@
   bench_transfer     — §3.1: collective census / transfer batching
   bench_roofline     — §Roofline: three-term table from the dry-run
   bench_kernels      — Pallas kernel micro-bench (interpret mode)
+  bench_power        — §4/Fig.5: Ws A/B via the telemetry stack (sampled
+                       traces, phase energy, CPU-only vs offloaded)
 """
 from __future__ import annotations
 
@@ -17,8 +19,8 @@ import sys
 import time
 
 from benchmarks import (bench_destinations, bench_ga, bench_kernels,
-                        bench_mriq, bench_narrowing, bench_roofline,
-                        bench_transfer)
+                        bench_mriq, bench_narrowing, bench_power,
+                        bench_roofline, bench_transfer)
 
 SUITES = {
     "mriq": bench_mriq,
@@ -28,6 +30,7 @@ SUITES = {
     "transfer": bench_transfer,
     "roofline": bench_roofline,
     "kernels": bench_kernels,
+    "power": bench_power,
 }
 
 

@@ -1,0 +1,62 @@
+"""Ws comparison report from persisted power traces.
+
+    PYTHONPATH=src python scripts/power_report.py --trace run.jsonl \
+        [--baseline base.jsonl] [--json] [--label NAME] [--baseline-label N]
+
+With ``--baseline`` the two JSONL traces are compared Fig.5-style (time
+ratio, Ws ratio, avg/peak W per phase); with only ``--trace`` a single-run
+summary is printed.  Imports only ``repro.telemetry`` — no jax — so it can
+run on a machine that just holds the logs.
+"""
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.telemetry import (PowerTrace, RunEnergy, compare,  # noqa: E402
+                             render_comparison_json,
+                             render_comparison_text,
+                             render_trace_summary)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", required=True,
+                    help="JSONL power trace of the run under test")
+    ap.add_argument("--baseline", default=None,
+                    help="JSONL power trace of the baseline (CPU-only) run")
+    ap.add_argument("--label", default=None,
+                    help="label for --trace (default: file stem)")
+    ap.add_argument("--baseline-label", default=None,
+                    help="label for --baseline (default: file stem)")
+    ap.add_argument("--workload", default="",
+                    help="workload name for the report header")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the comparison as JSON instead of text")
+    args = ap.parse_args()
+
+    for p in (args.trace, args.baseline):
+        if p is not None and not Path(p).is_file():
+            ap.error(f"no such trace file: {p}")
+    trace = PowerTrace.from_jsonl(args.trace)
+    label = args.label or Path(args.trace).stem
+    if args.baseline is None:
+        for line in render_trace_summary(trace, label):
+            print(line)
+        return
+
+    base = PowerTrace.from_jsonl(args.baseline)
+    base_label = args.baseline_label or Path(args.baseline).stem
+    cmp_ = compare(RunEnergy.from_trace(base_label, base),
+                   RunEnergy.from_trace(label, trace),
+                   workload=args.workload)
+    if args.json:
+        print(render_comparison_json(cmp_))
+    else:
+        for line in render_comparison_text(cmp_):
+            print(line)
+
+
+if __name__ == "__main__":
+    main()

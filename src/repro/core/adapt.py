@@ -24,7 +24,6 @@ differently for each business operator").
 from __future__ import annotations
 
 import dataclasses
-import statistics
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
@@ -35,7 +34,10 @@ from repro.core.ga import GAConfig
 from repro.core.intensity import site_census
 from repro.core.narrowing import narrow_candidates
 from repro.core.plan import PlanGenome
+from repro.core.power import V5E
 from repro.core.verifier import Measurement, Verifier
+from repro.telemetry.dvfs import envelope_for
+from repro.telemetry.energy import EnergyLedger
 
 
 # ---------------------------------------------------------------------------
@@ -122,16 +124,21 @@ def adjust_placement(chips: int) -> dict:
 
 @dataclass
 class ReconfigPolicy:
-    degrade_factor: float = 1.5     # re-search when step time drifts 1.5x
+    degrade_factor: float = 1.5     # re-search when step energy drifts 1.5x
     window: int = 16                # rolling baseline
     cooldown_steps: int = 64        # min distance between reconfigs
 
 
 @dataclass
 class Reconfigurator:
-    """Runtime monitor: watches measured step seconds; when the rolling
-    median degrades past the policy threshold (data drift, failing chip,
-    thermal throttle...), re-runs the offload search and emits a new plan.
+    """Runtime monitor: books each step into an ``EnergyLedger``; when the
+    step's Watt*seconds drift past the rolling median by the policy factor
+    (data drift, failing chip, thermal throttle...), re-runs the offload
+    search and emits a new plan.  Energy is the trigger — a throttled chip
+    that holds step time but burns boost watts still trips it — and when
+    the caller has no power meter, step energy defaults to
+    ``seconds x nominal_watts`` so pure time degradation drifts the ledger
+    identically.
 
     The caller swaps the plan at a checkpoint boundary (re-jit + restore),
     which the FT driver already supports — reconfiguration is therefore a
@@ -143,18 +150,32 @@ class Reconfigurator:
     ga: GAConfig = field(default_factory=lambda: GAConfig(population=6,
                                                           generations=3))
     verifier_factory: Optional[Callable] = None
-    baseline: list = field(default_factory=list)
+    ledger: EnergyLedger = field(default_factory=EnergyLedger)
+    nominal_watts: float = 0.0      # fallback W for un-metered steps
     events: list = field(default_factory=list)
     _last_reconfig: int = -10**9
 
+    def __post_init__(self) -> None:
+        self.ledger.window = self.policy.window
+        if self.nominal_watts <= 0:
+            self.nominal_watts = envelope_for(V5E).p_active
+
+    @property
+    def baseline(self) -> list:
+        """Rolling per-step seconds (kept for pre-ledger callers)."""
+        return [s for s, _ in self.ledger.steps]
+
     def observe(self, step: int, seconds: float,
-                current_plan: PlanConfig) -> Optional[PlanConfig]:
+                current_plan: PlanConfig,
+                energy_ws: Optional[float] = None) -> Optional[PlanConfig]:
         """Returns a new plan when reconfiguration triggers, else None."""
-        med = (statistics.median(self.baseline) if self.baseline else None)
-        self.baseline.append(seconds)
-        if len(self.baseline) > self.policy.window:
-            self.baseline.pop(0)
-        if med is None or seconds <= self.policy.degrade_factor * med:
+        if energy_ws is None:
+            energy_ws = seconds * self.nominal_watts
+        med_s = self.ledger.median_step_seconds()
+        med_ws = self.ledger.median_step_ws()
+        ratio = self.ledger.drift_ratio(energy_ws)
+        self.ledger.record_step(seconds, energy_ws)
+        if ratio is None or ratio <= self.policy.degrade_factor:
             return None
         if step - self._last_reconfig < self.policy.cooldown_steps:
             return None
@@ -164,13 +185,16 @@ class Reconfigurator:
                            mode="analytic"))
         shape = SHAPES[self.shape_name]
         sel = select_destination(self.cfg, shape.kind, v,
-                                 Requirement(max_seconds=med), self.ga)
+                                 Requirement(max_seconds=med_s), self.ga)
         new_plan = sel.chosen.genome.to_plan()
         self.events.append({"step": step, "seconds": seconds,
-                            "median": med,
+                            "median": med_s,
+                            "energy_ws": energy_ws,
+                            "median_ws": med_ws,
+                            "drift_ratio": ratio,
                             "new_plan": new_plan.describe(),
                             "stage": sel.chosen.name})
-        self.baseline.clear()
+        self.ledger.reset_steps()
         return new_plan
 
 

@@ -73,8 +73,10 @@ class PowerModel:
 
     def watts(self, flops: float, hbm_bytes: float, ici_bytes: float,
               seconds: float, chips: int = 1) -> float:
+        # zero-duration phases draw the static floor, not inf (inf would
+        # poison downstream fitness averaging)
         if seconds <= 0:
-            return float("inf")
+            return self.hw.p_static * chips
         return self.energy(flops, hbm_bytes, ici_bytes, seconds, chips) / seconds
 
     # -- roofline time terms (per the §Roofline formulas) --------------------

@@ -28,6 +28,8 @@ from repro.core.fitness import TIMEOUT_PENALTY_S, TIMEOUT_SECONDS, fitness
 from repro.core.intensity import estimate_program
 from repro.core.plan import PlanGenome
 from repro.core.power import PowerModel, V5E
+from repro.telemetry.trace import PowerTrace
+from repro.telemetry.sampler import synthesize_phase_trace
 
 REPO_ROOT = Path(__file__).resolve().parents[3]
 
@@ -44,6 +46,9 @@ class Measurement:
     source: str = "analytic"
     ok: bool = True
     error: str = ""
+    # phase-marked power trace of the trial; the analytic rung synthesizes
+    # it from the roofline terms so integral(trace) == energy_j
+    trace: Optional[PowerTrace] = field(default=None, repr=False)
 
     def fitness(self, alpha: float = 0.5, beta: float = 0.5) -> float:
         return fitness(self.seconds, self.watts, alpha, beta)
@@ -51,10 +56,14 @@ class Measurement:
 
 def penalty_measurement(error: str, power: PowerModel) -> Measurement:
     """Paper §4.1: timeout/failure -> processing time := 1000 s."""
+    trace = synthesize_phase_trace(
+        [("penalty", TIMEOUT_PENALTY_S, 0.0)],
+        static_watts=power.hw.p_static, samples_per_phase=4,
+        meta={"source": "penalty"})
     return Measurement(seconds=TIMEOUT_PENALTY_S,
                        watts=power.hw.p_static,
                        energy_j=TIMEOUT_PENALTY_S * power.hw.p_static,
-                       ok=False, error=error, source="penalty")
+                       ok=False, error=error, source="penalty", trace=trace)
 
 
 @dataclass
@@ -117,7 +126,28 @@ class Verifier:
         e = w * t * self.n_chips
         return Measurement(seconds=t, watts=w, energy_j=e, flops=flops,
                            hbm_bytes=hbm, coll_bytes=coll,
-                           peak_mem_per_chip=peak_mem, source=source)
+                           peak_mem_per_chip=peak_mem, source=source,
+                           trace=self._synthesize_trace(flops, hbm, coll, t,
+                                                        source))
+
+    def _synthesize_trace(self, flops: float, hbm: float, coll: float,
+                          t: float, source: str) -> Optional[PowerTrace]:
+        """Phase-marked trace from the roofline decomposition: the
+        compute/memory-bound span followed by the exposed-collective span,
+        each drawing static + its dynamic joules.  By construction the
+        trapezoidal integral equals ``energy_j``."""
+        if t <= 0:
+            return None
+        hw = self.power.hw
+        t_cm = min(max(self.power.compute_term(flops, self.n_chips),
+                       self.power.memory_term(hbm, self.n_chips)), t)
+        dyn_cm = flops * hw.e_flop + hbm * hw.e_hbm
+        dyn_coll = coll * self.n_chips * hw.e_ici
+        return synthesize_phase_trace(
+            [("compute", t_cm, dyn_cm), ("collective", t - t_cm, dyn_coll)],
+            static_watts=hw.p_static * self.n_chips,
+            meta={"source": source, "arch": self.cfg.name,
+                  "shape": self.shape_name, "chips": self.n_chips})
 
     def _measure_analytic(self, plan: PlanConfig) -> Measurement:
         try:

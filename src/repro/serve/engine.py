@@ -4,9 +4,15 @@
 compiles these for the decode/prefill shapes).  ``ServeLoop`` is a simple
 continuous-batching scheduler: fixed decode batch, slots freed on EOS/length
 and refilled from the queue, greedy sampling.
+
+Pass a ``repro.telemetry.DecodeEnergyMeter`` to attribute per-request
+Watt*seconds: every prefill/decode step's wall time + slot utilization is
+booked into the meter's trace and ledger, and the step's energy is split
+across the requests that shared the batch (``Request.energy_ws``).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -16,6 +22,7 @@ import numpy as np
 
 from repro.models.model import Model
 from repro.parallel.sharding import ShardingRules
+from repro.telemetry.energy import DecodeEnergyMeter
 
 
 def make_prefill(model: Model, rules: Optional[ShardingRules] = None):
@@ -37,18 +44,21 @@ class Request:
     max_new: int
     out: list[int] = field(default_factory=list)
     done: bool = False
+    energy_ws: float = 0.0      # attributed prefill+decode Watt*seconds
 
 
 class ServeLoop:
     """Continuous-batching greedy decoder over a fixed slot batch."""
 
     def __init__(self, model: Model, params, batch_slots: int, max_seq: int,
-                 eos_id: int = 1):
+                 eos_id: int = 1,
+                 meter: Optional[DecodeEnergyMeter] = None):
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.max_seq = max_seq
         self.eos = eos_id
+        self.meter = meter
         self.queue: list[Request] = []
         self.active: list[Optional[Request]] = [None] * batch_slots
         self.cache = model.init_cache(batch_slots, max_seq)
@@ -67,8 +77,13 @@ class ServeLoop:
                 # teacher-forced sequential prefill through the decode path
                 # (single-slot prompts stay short in the examples; production
                 # prefill uses make_prefill on a full batch)
+                t0 = time.perf_counter()
                 for t, tok in enumerate(req.prompt[:-1]):
                     self._step_one(i, int(tok), t)
+                if self.meter is not None:
+                    req.energy_ws += self.meter.observe(
+                        time.perf_counter() - t0, util=1.0 / self.slots,
+                        phase="prefill")
                 self.pos[i] = len(req.prompt) - 1
                 self._tokens[i, 0] = int(req.prompt[-1])
 
@@ -84,12 +99,21 @@ class ServeLoop:
         self._fill_slots()
         if all(r is None for r in self.active):
             return 0
+        participants = [r for r in self.active if r is not None]
+        t0 = time.perf_counter()
         pos = int(max(self.pos[i] for i, r in enumerate(self.active)
                       if r is not None))
         batch = {"tokens": jnp.asarray(self._tokens),
                  "pos": jnp.asarray(pos, jnp.int32)}
         logits, self.cache = self._decode(self.params, batch, self.cache)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        if self.meter is not None:
+            # the step's Ws splits evenly across the requests in the batch
+            ws = self.meter.observe(time.perf_counter() - t0,
+                                    util=len(participants) / self.slots,
+                                    phase="decode")
+            for r in participants:
+                r.energy_ws += ws / len(participants)
         n_active = 0
         for i, req in enumerate(self.active):
             if req is None:

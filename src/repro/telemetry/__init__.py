@@ -1,0 +1,22 @@
+"""repro.telemetry — sampled power tracing and Watt*second accounting.
+
+The measurement half of the paper: where ``repro.core.power`` *predicts*
+energy from roofline counters, this package *observes* it — fixed-interval
+watt sampling (the IPMI analogue), phase-marked traces with trapezoidal
+Ws integration, a per-phase ledger that the Step-7 monitor and the serving
+loop both write into, and the Fig. 5 CPU-only vs offloaded A/B harness.
+"""
+from repro.telemetry.trace import PhaseSpan, PowerTrace  # noqa: F401
+from repro.telemetry.dvfs import (PowerEnvelope, envelope_for,  # noqa: F401
+                                  node_envelope)
+from repro.telemetry.sampler import (ConstantSource,  # noqa: F401
+                                     ModeledSource, PowerSampler,
+                                     ReplaySource, synthesize_phase_trace)
+from repro.telemetry.energy import (DecodeEnergyMeter,  # noqa: F401
+                                    EnergyLedger, PhaseEnergy)
+from repro.telemetry.compare import (RunEnergy, WsComparison,  # noqa: F401
+                                     ab_sample, compare)
+from repro.telemetry.report import (render_comparison_csv,  # noqa: F401
+                                    render_comparison_json,
+                                    render_comparison_text,
+                                    render_ledger, render_trace_summary)

@@ -1,0 +1,136 @@
+"""The paper's A/B energy harness — Watt*seconds, CPU-only vs offloaded.
+
+Fig. 5's method: run the workload on the un-offloaded destination and on
+the offloaded one, integrate sampled watts over each run, and compare
+Watt*seconds (the paper's MRI-Q anchor: 14 s x 121 W = 1690 Ws CPU-only
+vs 2 s x 111 W = 223 Ws offloaded, a 7.6x energy cut).
+
+``RunEnergy`` summarizes one run (from a trace, a verifier measurement, or
+bare numbers); ``WsComparison`` holds the pair plus the derived ratios the
+paper reports: time ratio, Ws ratio, average/peak watts per phase.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.telemetry.sampler import PowerSampler, PowerSource
+from repro.telemetry.trace import PowerTrace
+
+
+@dataclass
+class RunEnergy:
+    """Energy summary of one run of one destination."""
+    label: str
+    seconds: float
+    ws: float
+    avg_w: float = 0.0
+    peak_w: float = 0.0
+    phases: dict = field(default_factory=dict)   # name -> stats dict
+    trace: Optional[PowerTrace] = None
+
+    def __post_init__(self) -> None:
+        if self.avg_w == 0.0 and self.seconds > 0:
+            self.avg_w = self.ws / self.seconds
+        if self.peak_w == 0.0:
+            self.peak_w = self.avg_w
+
+    @classmethod
+    def from_trace(cls, label: str, trace: PowerTrace,
+                   scale: float = 1.0) -> "RunEnergy":
+        phases = {n: trace.phase_stats(n) for n in trace.phase_names()}
+        if scale != 1.0:
+            for st in phases.values():
+                st["ws"] *= scale
+                st["avg_w"] *= scale
+                st["peak_w"] *= scale
+        return cls(label=label, seconds=trace.duration,
+                   ws=trace.energy_ws() * scale,
+                   avg_w=trace.avg_watts() * scale,
+                   peak_w=trace.peak_watts() * scale,
+                   phases=phases, trace=trace)
+
+    @classmethod
+    def from_measurement(cls, label: str, m) -> "RunEnergy":
+        """From a ``repro.core.verifier.Measurement`` (duck-typed: needs
+        .seconds/.energy_j and optionally .trace)."""
+        trace = getattr(m, "trace", None)
+        if trace is not None and len(trace) >= 2:
+            run = cls.from_trace(label, trace)
+            run.ws = m.energy_j         # keep the ledgered number canonical
+            return run
+        return cls(label=label, seconds=m.seconds, ws=m.energy_j)
+
+
+@dataclass
+class WsComparison:
+    """Baseline (CPU-only) vs candidate (offloaded) Watt*second report."""
+    baseline: RunEnergy
+    candidate: RunEnergy
+    workload: str = ""
+
+    @property
+    def time_ratio(self) -> float:
+        return self.candidate.seconds / max(self.baseline.seconds, 1e-12)
+
+    @property
+    def ws_ratio(self) -> float:
+        return self.candidate.ws / max(self.baseline.ws, 1e-12)
+
+    @property
+    def power_ratio(self) -> float:
+        return self.candidate.avg_w / max(self.baseline.avg_w, 1e-12)
+
+    @property
+    def savings_ws(self) -> float:
+        return self.baseline.ws - self.candidate.ws
+
+    @property
+    def savings_pct(self) -> float:
+        return 100.0 * self.savings_ws / max(self.baseline.ws, 1e-12)
+
+    @property
+    def energy_cut(self) -> float:
+        """The paper's headline: baseline_ws / candidate_ws (7.6x for
+        MRI-Q)."""
+        return self.baseline.ws / max(self.candidate.ws, 1e-12)
+
+    def to_dict(self) -> dict:
+        def run(r: RunEnergy) -> dict:
+            return {"label": r.label, "seconds": r.seconds, "ws": r.ws,
+                    "avg_w": r.avg_w, "peak_w": r.peak_w,
+                    "phases": r.phases}
+        return {"workload": self.workload,
+                "baseline": run(self.baseline),
+                "candidate": run(self.candidate),
+                "time_ratio": self.time_ratio, "ws_ratio": self.ws_ratio,
+                "power_ratio": self.power_ratio,
+                "savings_ws": self.savings_ws,
+                "savings_pct": self.savings_pct,
+                "energy_cut": self.energy_cut}
+
+
+def compare(baseline: RunEnergy, candidate: RunEnergy,
+            workload: str = "") -> WsComparison:
+    return WsComparison(baseline=baseline, candidate=candidate,
+                        workload=workload)
+
+
+def ab_sample(workload: str,
+              baseline_label: str, baseline_fn: Callable,
+              candidate_label: str, candidate_fn: Callable,
+              baseline_source: PowerSource, candidate_source: PowerSource,
+              interval: float = 0.05) -> WsComparison:
+    """Run both destinations under wall-clock sampling and compare.
+
+    This is the full Fig. 5 protocol for workloads that actually execute on
+    this host (each destination may draw from a different power source, as
+    the paper's CPU-only and FPGA runs do).
+    """
+    _, trace_b = PowerSampler(baseline_source, interval).sample_during(
+        baseline_fn)
+    _, trace_c = PowerSampler(candidate_source, interval).sample_during(
+        candidate_fn)
+    return compare(RunEnergy.from_trace(baseline_label, trace_b),
+                   RunEnergy.from_trace(candidate_label, trace_c),
+                   workload=workload)

@@ -1,0 +1,92 @@
+"""Power-state modeling — idle/active/boost envelopes per hardware spec.
+
+The closed-form ``PowerModel`` treats static power as a constant; real
+devices don't: an idle chip clock-gates toward a floor, a loaded chip draws
+its active envelope, and a chip past the boost threshold briefly exceeds it
+(DVFS).  ``PowerEnvelope`` captures those three states so a sampler can turn
+a utilization signal into instantaneous watts.
+
+``envelope_for`` derives the envelope from a ``HardwareSpec``'s energy
+constants: the active point is the idle floor plus the dynamic power of a
+roofline-balanced chip (compute at peak FLOP/s while streaming HBM at full
+bandwidth) — for the v5e constants that lands at ~162 W, matching the
+calibration note in ``repro.core.power``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:      # duck-typed at runtime: keeps telemetry import-light
+    from repro.core.power import HardwareSpec, NodeSpec
+
+
+@dataclass(frozen=True)
+class PowerEnvelope:
+    """Idle/active/boost operating points with linear interpolation.
+
+    ``watts(util)`` maps utilization in [0, 1] to instantaneous draw:
+    idle -> active linearly, then a boost bump above ``boost_util`` (the
+    DVFS opportunistic region).  ``gated_idle`` is the clock-gated floor a
+    chip falls to when utilization stays under ``gate_util`` — this is what
+    makes static power state-dependent rather than constant.
+    """
+    name: str
+    p_idle: float                  # W at rest (the old constant p_static)
+    p_active: float                # W at full roofline utilization
+    p_boost: float                 # W ceiling in the DVFS boost region
+    boost_util: float = 0.90       # utilization where boost engages
+    gate_util: float = 0.02        # below this the chip clock-gates
+    gate_fraction: float = 0.75    # gated floor = gate_fraction * p_idle
+
+    def __post_init__(self) -> None:
+        if not self.p_idle <= self.p_active <= self.p_boost:
+            raise ValueError(f"envelope must order idle<=active<=boost, got "
+                             f"{self.p_idle}/{self.p_active}/{self.p_boost}")
+
+    @property
+    def gated_idle(self) -> float:
+        return self.gate_fraction * self.p_idle
+
+    def state(self, util: float) -> str:
+        util = min(max(util, 0.0), 1.0)
+        if util < self.gate_util:
+            return "idle"
+        return "boost" if util > self.boost_util else "active"
+
+    def static_watts(self, util: float) -> float:
+        """State-dependent replacement for the constant p_static."""
+        return self.gated_idle if self.state(util) == "idle" else self.p_idle
+
+    def watts(self, util: float) -> float:
+        """Instantaneous draw at a given utilization."""
+        util = min(max(util, 0.0), 1.0)
+        if util < self.gate_util:
+            # gated floor, ramping back to p_idle at the gate threshold
+            return self.gated_idle + (self.p_idle - self.gated_idle) \
+                * util / max(self.gate_util, 1e-12)
+        w = self.p_idle + (self.p_active - self.p_idle) * util
+        if util > self.boost_util:
+            w += (self.p_boost - self.p_active) \
+                * (util - self.boost_util) / (1.0 - self.boost_util)
+        return w
+
+
+def envelope_for(hw: HardwareSpec, boost_headroom: float = 0.12
+                 ) -> PowerEnvelope:
+    """Derive idle/active/boost from a chip's roofline energy constants."""
+    p_dyn = hw.peak_flops * hw.e_flop + hw.hbm_bw * hw.e_hbm
+    p_active = hw.p_static + p_dyn
+    return PowerEnvelope(name=hw.name, p_idle=hw.p_static, p_active=p_active,
+                         p_boost=p_active * (1.0 + boost_headroom))
+
+
+def node_envelope(node: NodeSpec, accelerated: bool = False,
+                  boost_headroom: float = 0.05) -> PowerEnvelope:
+    """Whole-node envelope from the paper's measured operating points
+    (R740+Arria10: 105 W idle, 121 W CPU-active, 111 W accelerator-active)."""
+    p_active = node.p_accel_active if accelerated else node.p_cpu_active
+    return PowerEnvelope(name=f"{node.name}:"
+                         f"{'accel' if accelerated else 'cpu'}",
+                         p_idle=node.p_idle, p_active=p_active,
+                         p_boost=p_active * (1.0 + boost_headroom))

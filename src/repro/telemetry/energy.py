@@ -1,0 +1,159 @@
+"""Per-phase energy ledger — Watt*seconds aggregated across traces/nodes.
+
+The paper's bottom line is an energy number per run; at fleet scale that
+number must aggregate across chips, nodes and program phases while staying
+comparable between plans.  ``EnergyLedger`` is that accumulator:
+
+  * ``add`` / ``absorb`` fold phase-attributed Watt*seconds in (a trace's
+    spans map 1:1 onto ledger phases; ``scale`` multiplies per-chip traces
+    up to slice totals),
+  * per-step recording with a rolling window supports the Step-7 monitor:
+    ``drift_ratio`` compares the latest step's energy against the rolling
+    median, which is what triggers an in-operation re-search (energy drift
+    catches a thermal-throttled or failing chip even when step *time* still
+    looks healthy).
+
+``DecodeEnergyMeter`` is the serving-side client: it turns measured decode
+step durations + slot utilization into a live trace and per-request energy
+attribution.
+"""
+from __future__ import annotations
+
+import statistics
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.telemetry.dvfs import PowerEnvelope
+from repro.telemetry.trace import PowerTrace
+
+
+@dataclass
+class PhaseEnergy:
+    ws: float = 0.0
+    seconds: float = 0.0
+    count: int = 0
+    peak_w: float = 0.0
+
+    @property
+    def avg_watts(self) -> float:
+        return self.ws / self.seconds if self.seconds > 0 else 0.0
+
+
+@dataclass
+class EnergyLedger:
+    """Aggregates Watt*seconds by phase and node + rolling step-drift."""
+    window: int = 16
+    phases: dict = field(default_factory=dict)      # name -> PhaseEnergy
+    nodes: dict = field(default_factory=dict)       # node -> total ws
+    steps: list = field(default_factory=list)       # rolling (seconds, ws)
+
+    # -- aggregation ---------------------------------------------------------
+
+    def add(self, phase: str, ws: float, seconds: float,
+            peak_w: float = 0.0, node: str = "node0") -> None:
+        pe = self.phases.setdefault(phase, PhaseEnergy())
+        pe.ws += ws
+        pe.seconds += seconds
+        pe.count += 1
+        pe.peak_w = max(pe.peak_w, peak_w)
+        self.nodes[node] = self.nodes.get(node, 0.0) + ws
+
+    def absorb(self, trace: PowerTrace, scale: float = 1.0,
+               node: str = "node0") -> None:
+        """Fold a trace's phases in; ``scale`` lifts per-chip traces to
+        slice totals (ws and peak both scale with chips).  Only *leaf*
+        spans are booked — umbrella spans (e.g. the synthesized traces'
+        whole-run "step") contain the leaves and would double-count the
+        same joules."""
+        spans = trace.spans
+
+        def covered(s):
+            for o in spans:
+                if o is s or not s.contains(o):
+                    continue
+                if not o.contains(s):          # s strictly contains o
+                    return True
+                if o.depth > s.depth:          # same window, deeper marker
+                    return True
+            return False
+
+        leaves = [s for s in spans if not covered(s)]
+        for s in leaves:
+            ws = trace.energy_ws(s.t0, s.t1) * scale
+            self.add(s.name, ws, s.seconds,
+                     peak_w=trace.peak_watts(s.t0, s.t1) * scale, node=node)
+
+    @property
+    def total_ws(self) -> float:
+        return sum(p.ws for p in self.phases.values())
+
+    @property
+    def total_seconds(self) -> float:
+        return sum(p.seconds for p in self.phases.values())
+
+    def per_phase(self) -> dict:
+        return {n: {"ws": p.ws, "seconds": p.seconds, "count": p.count,
+                    "avg_w": p.avg_watts, "peak_w": p.peak_w}
+                for n, p in self.phases.items()}
+
+    # -- step drift (Step-7 in-operation monitor) ----------------------------
+
+    def record_step(self, seconds: float, ws: float) -> None:
+        self.steps.append((float(seconds), float(ws)))
+        if len(self.steps) > self.window:
+            self.steps.pop(0)
+
+    def median_step_ws(self) -> Optional[float]:
+        return statistics.median(ws for _, ws in self.steps) \
+            if self.steps else None
+
+    def median_step_seconds(self) -> Optional[float]:
+        return statistics.median(s for s, _ in self.steps) \
+            if self.steps else None
+
+    def drift_ratio(self, ws: float) -> Optional[float]:
+        """Latest step energy vs the rolling median (None until warm)."""
+        med = self.median_step_ws()
+        if med is None or med <= 0:
+            return None
+        return ws / med
+
+    def reset_steps(self) -> None:
+        self.steps.clear()
+
+    def summary(self) -> str:
+        parts = [f"{n}={p.ws:.1f}Ws/{p.seconds:.3f}s"
+                 for n, p in sorted(self.phases.items())]
+        return f"total={self.total_ws:.1f}Ws [" + " ".join(parts) + "]"
+
+
+@dataclass
+class DecodeEnergyMeter:
+    """Live per-step decode energy for the serving loop.
+
+    ``observe`` converts one decode step's wall seconds + slot utilization
+    into Watt*seconds via the DVFS envelope, appends a flat segment to the
+    trace on a cumulative decode timeline (duplicate boundary samples keep
+    trapezoidal integration exact), and books it into the ledger.  The
+    caller divides the returned Ws across the requests that shared the
+    batch.
+    """
+    envelope: PowerEnvelope
+    chips: int = 1
+    trace: PowerTrace = field(default_factory=PowerTrace)
+    ledger: EnergyLedger = field(default_factory=EnergyLedger)
+    _now: float = 0.0
+
+    def observe(self, seconds: float, util: float = 1.0,
+                phase: str = "decode") -> float:
+        seconds = max(float(seconds), 0.0)
+        w = self.envelope.watts(util) * self.chips
+        ws = w * seconds
+        if seconds > 0:
+            t1 = self._now + seconds
+            self.trace.add(self._now, w)
+            self.trace.add(t1, w)
+            self.trace.mark_phase(phase, self._now, t1)
+            self._now = t1
+        self.ledger.add(phase, ws, seconds, peak_w=w)
+        return ws

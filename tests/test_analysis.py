@@ -1,6 +1,7 @@
 """HLO census parsing, roofline derivation, sharding legality, estimates."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev dep
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import SHAPES, get_config

@@ -4,6 +4,7 @@ import math
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev dep
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import SHAPES, get_config
