@@ -1,6 +1,6 @@
 """Fig. 5 via the telemetry stack — Watt*seconds, CPU-only vs offloaded.
 
-Four workloads through one ``WsComparison`` pipeline:
+Five workloads through one ``WsComparison`` pipeline:
 
   * ``mriq_host``   — MRI-Q on this host: the CPU-only run is *sampled*
                       wall-clock at the paper's measured 121 W node point
@@ -14,20 +14,30 @@ Four workloads through one ``WsComparison`` pipeline:
                     — transformer/SSM configs on the analytic verifier:
                       all-XLA un-offloaded plan vs Pallas-offloaded plan,
                       compared via the phase-marked traces each
-                      ``Measurement`` now carries.
+                      ``Measurement`` now carries;
+  * ``serve_tiny``  — the serving-mode A/B: one request stream served
+                      twice through ``ServeLoop`` + ``DecodeEnergyMeter``
+                      (CPU-only node point vs accelerated node point, step
+                      time ratio taken from the verifier's plan
+                      measurements), reported with per-request
+                      prefill/decode Ws bill lines.
 """
 from __future__ import annotations
 
 import time
 
 import jax
+import numpy as np
 
 from repro.configs import get_config
 from repro.core.power import R740_ARRIA10
 from repro.core.verifier import Verifier
 from repro.kernels import ref
-from repro.telemetry import (ConstantSource, PowerSampler, RunEnergy,
-                             compare, render_comparison_csv,
+from repro.models.model import Model
+from repro.serve.engine import Request, ServeLoop
+from repro.telemetry import (ConstantSource, DecodeEnergyMeter,
+                             PowerSampler, RunEnergy, TickClock, compare,
+                             node_envelope, render_comparison_csv,
                              render_comparison_text, synthesize_phase_trace)
 
 from benchmarks.bench_mriq import _data, offload_phase_times
@@ -92,6 +102,51 @@ def _transformer_comparison(arch: str, shape_name: str, workload: str):
                    workload=workload)
 
 
+def _serving_comparison():
+    """Fig. 5 under traffic: the same request stream served on the CPU-only
+    node point and on the accelerated one, with the step-time ratio taken
+    from the analytic verifier's plan measurements."""
+    cfg = get_config("tiny-test")
+    node = R740_ARRIA10
+    v = Verifier(cfg, "decode_32k", n_chips=256, mode="analytic")
+    baseline_plan = cfg.plan.replace(
+        attn_impl="xla", mlp_impl="xla", ssm_impl="xla", rglru_impl="xla",
+        overlap_collectives=False, fused_grad_reduce=False)
+    offload_plan = cfg.plan.replace(
+        attn_impl="pallas", mlp_impl="pallas", ssm_impl="pallas",
+        rglru_impl="pallas", overlap_collectives=True,
+        fused_grad_reduce=True)
+    mb = v.measure_plan(baseline_plan)
+    mo = v.measure_plan(offload_plan)
+    dt_base = 2e-3
+    dt_off = dt_base * mo.seconds / max(mb.seconds, 1e-12)
+
+    def serve(envelope, dt):
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        meter = DecodeEnergyMeter(envelope=envelope)
+        loop = ServeLoop(model, params, batch_slots=2, max_seq=64,
+                         meter=meter, clock=TickClock(dt))
+        rng = np.random.default_rng(0)
+        reqs = []
+        for i in range(6):
+            prompt = rng.integers(2, cfg.vocab_size,
+                                  size=6).astype(np.int32)
+            req = Request(rid=i, prompt=prompt, max_new=8,
+                          tenant=f"tenant{i % 2}")
+            reqs.append(req)
+            loop.submit(req)
+        loop.run()
+        return meter, reqs
+
+    meter_b, reqs_b = serve(node_envelope(node, accelerated=False), dt_base)
+    meter_o, reqs_o = serve(node_envelope(node, accelerated=True), dt_off)
+    return compare(
+        RunEnergy.from_serving("cpu_only(serving)", meter_b, reqs_b),
+        RunEnergy.from_serving("pallas_offload(serving)", meter_o, reqs_o),
+        workload="serve_tiny")
+
+
 def run() -> list[str]:
     lines: list[str] = []
     t0 = time.time()
@@ -101,6 +156,7 @@ def run() -> list[str]:
         _transformer_comparison("qwen2-7b", "train_4k", "qwen2_train"),
         _transformer_comparison("mamba2-1.3b", "decode_32k",
                                 "mamba2_decode"),
+        _serving_comparison(),
     ]
     for cmp_ in comparisons:
         lines.extend(render_comparison_csv(cmp_))

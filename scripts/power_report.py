@@ -1,31 +1,39 @@
-"""Ws comparison report from persisted power traces.
+"""Ws comparison report from persisted power traces / energy ledgers.
 
     PYTHONPATH=src python scripts/power_report.py --trace run.jsonl \
         [--baseline base.jsonl] [--json] [--label NAME] [--baseline-label N]
+    PYTHONPATH=src python scripts/power_report.py --ledger fleet.json
 
 With ``--baseline`` the two JSONL traces are compared Fig.5-style (time
 ratio, Ws ratio, avg/peak W per phase); with only ``--trace`` a single-run
-summary is printed.  Imports only ``repro.telemetry`` — no jax — so it can
-run on a machine that just holds the logs.
+summary is printed.  ``--ledger`` renders a persisted fleet EnergyLedger
+(the governed serving loop's ``--ledger-out``) as node / tenant / phase
+rollups — the fleet view and the per-tenant energy bill.  Imports only
+``repro.telemetry`` — no jax — so it can run on a machine that just holds
+the logs.
 """
 import argparse
+import json
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.telemetry import (PowerTrace, RunEnergy, compare,  # noqa: E402
-                             render_comparison_json,
+from repro.telemetry import (EnergyLedger, PowerTrace,  # noqa: E402
+                             RunEnergy, compare,
                              render_comparison_text,
-                             render_trace_summary)
+                             render_rollups, render_trace_summary)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--trace", required=True,
+    ap.add_argument("--trace", default=None,
                     help="JSONL power trace of the run under test")
     ap.add_argument("--baseline", default=None,
                     help="JSONL power trace of the baseline (CPU-only) run")
+    ap.add_argument("--ledger", default=None,
+                    help="JSON fleet ledger to render as "
+                         "node/tenant/phase rollups")
     ap.add_argument("--label", default=None,
                     help="label for --trace (default: file stem)")
     ap.add_argument("--baseline-label", default=None,
@@ -33,29 +41,60 @@ def main() -> None:
     ap.add_argument("--workload", default="",
                     help="workload name for the report header")
     ap.add_argument("--json", action="store_true",
-                    help="emit the comparison as JSON instead of text")
+                    help="emit the report as JSON instead of text")
     args = ap.parse_args()
 
-    for p in (args.trace, args.baseline):
+    if args.trace is None and args.ledger is None:
+        ap.error("need --trace and/or --ledger")
+    if args.baseline is not None and args.trace is None:
+        ap.error("--baseline requires --trace")
+    for p in (args.trace, args.baseline, args.ledger):
         if p is not None and not Path(p).is_file():
-            ap.error(f"no such trace file: {p}")
-    trace = PowerTrace.from_jsonl(args.trace)
-    label = args.label or Path(args.trace).stem
-    if args.baseline is None:
-        for line in render_trace_summary(trace, label):
-            print(line)
-        return
+            ap.error(f"no such file: {p}")
 
-    base = PowerTrace.from_jsonl(args.baseline)
-    base_label = args.baseline_label or Path(args.baseline).stem
-    cmp_ = compare(RunEnergy.from_trace(base_label, base),
-                   RunEnergy.from_trace(label, trace),
-                   workload=args.workload)
+    # json mode collects every requested section into ONE document (a bare
+    # section when only one was asked for — the original CLI contract)
+    json_doc: dict = {}
+
+    if args.ledger is not None:
+        ledger = EnergyLedger.from_json(args.ledger)
+        if args.json:
+            rollups = {by: {k: pe.to_dict()
+                            for k, pe in ledger.rollup(by).items()}
+                       for by in ("node", "tenant", "phase")}
+            json_doc["ledger"] = {"total_ws": ledger.total_ws,
+                                  "total_seconds": ledger.total_seconds,
+                                  "rollups": rollups}
+        else:
+            for line in render_rollups(ledger,
+                                       label=Path(args.ledger).stem):
+                print(line)
+
+    if args.trace is not None:
+        trace = PowerTrace.from_jsonl(args.trace)
+        label = args.label or Path(args.trace).stem
+        if args.baseline is None:
+            if args.json:
+                json_doc["trace"] = trace.summary()
+            else:
+                for line in render_trace_summary(trace, label):
+                    print(line)
+        else:
+            base = PowerTrace.from_jsonl(args.baseline)
+            base_label = args.baseline_label or Path(args.baseline).stem
+            cmp_ = compare(RunEnergy.from_trace(base_label, base),
+                           RunEnergy.from_trace(label, trace),
+                           workload=args.workload)
+            if args.json:
+                json_doc["comparison"] = cmp_.to_dict()
+            else:
+                for line in render_comparison_text(cmp_):
+                    print(line)
+
     if args.json:
-        print(render_comparison_json(cmp_))
-    else:
-        for line in render_comparison_text(cmp_):
-            print(line)
+        out = next(iter(json_doc.values())) if len(json_doc) == 1 \
+            else json_doc
+        print(json.dumps(out, indent=2, sort_keys=True))
 
 
 if __name__ == "__main__":

@@ -143,6 +143,13 @@ class Reconfigurator:
     The caller swaps the plan at a checkpoint boundary (re-jit + restore),
     which the FT driver already supports — reconfiguration is therefore a
     checkpointed plan migration, not a live mutation.
+
+    ``derive_requirement`` controls the re-search's latency bound: when
+    True (training, where ``observe`` receives verifier-comparable
+    per-step seconds) the search must beat the rolling median step time;
+    set it False when the observed seconds live in a different unit
+    domain than the verifier's (e.g. serving flush windows) — the search
+    then selects purely on the power-aware fitness.
     """
     cfg: ArchConfig
     shape_name: str
@@ -152,6 +159,8 @@ class Reconfigurator:
     verifier_factory: Optional[Callable] = None
     ledger: EnergyLedger = field(default_factory=EnergyLedger)
     nominal_watts: float = 0.0      # fallback W for un-metered steps
+    node: str = "node0"             # which serving node this monitor watches
+    derive_requirement: bool = True
     events: list = field(default_factory=list)
     _last_reconfig: int = -10**9
 
@@ -164,6 +173,16 @@ class Reconfigurator:
     def baseline(self) -> list:
         """Rolling per-step seconds (kept for pre-ledger callers)."""
         return [s for s, _ in self.ledger.steps]
+
+    def for_node(self, node: str) -> "Reconfigurator":
+        """A fresh monitor for another serving node: same arch/policy/search
+        config, but its own rolling window, cooldown and event log — drift
+        is judged against the node's own history, not the fleet's."""
+        return Reconfigurator(self.cfg, self.shape_name, policy=self.policy,
+                              ga=self.ga,
+                              verifier_factory=self.verifier_factory,
+                              nominal_watts=self.nominal_watts, node=node,
+                              derive_requirement=self.derive_requirement)
 
     def observe(self, step: int, seconds: float,
                 current_plan: PlanConfig,
@@ -184,10 +203,12 @@ class Reconfigurator:
              else Verifier(self.cfg, self.shape_name, n_chips=256,
                            mode="analytic"))
         shape = SHAPES[self.shape_name]
-        sel = select_destination(self.cfg, shape.kind, v,
-                                 Requirement(max_seconds=med_s), self.ga)
+        req = Requirement(max_seconds=med_s) \
+            if self.derive_requirement and med_s is not None else None
+        sel = select_destination(self.cfg, shape.kind, v, req, self.ga)
         new_plan = sel.chosen.genome.to_plan()
-        self.events.append({"step": step, "seconds": seconds,
+        self.events.append({"step": step, "node": self.node,
+                            "seconds": seconds,
                             "median": med_s,
                             "energy_ws": energy_ws,
                             "median_ws": med_ws,

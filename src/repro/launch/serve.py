@@ -1,6 +1,19 @@
 """Serving driver (CLI): batched continuous-batching greedy decode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tiny-test --requests 6
+
+Power-governed serving (the paper's Step 7 under traffic):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tiny-test \
+        --requests 8 --tenants teamA,teamB --govern \
+        --ledger-out artifacts/serve/fleet.json \
+        --trace-out artifacts/serve/node0.jsonl
+
+Every run meters per-request prefill/decode Watt*seconds (DVFS-envelope
+DecodeEnergyMeter).  With ``--govern`` a PowerGovernor closes the loop:
+meter flushes roll into a fleet EnergyLedger (per-node / per-tenant
+rollups) and energy drift triggers a checkpointed plan migration.  The
+persisted ledger/trace re-render offline via ``scripts/power_report.py``.
 """
 from __future__ import annotations
 
@@ -11,8 +24,13 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.adapt import ReconfigPolicy, Reconfigurator
+from repro.core.ga import GAConfig
+from repro.core.power import V5E
 from repro.models.model import Model
 from repro.serve.engine import Request, ServeLoop
+from repro.telemetry import (DecodeEnergyMeter, GovernorPolicy,
+                             PowerGovernor, envelope_for, render_rollups)
 
 
 def main() -> None:
@@ -23,37 +41,83 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--node", default="node0",
+                    help="node label for ledger rollups")
+    ap.add_argument("--tenants", default="default",
+                    help="comma-separated tenant labels, cycled across "
+                         "requests (per-tenant energy billing)")
+    ap.add_argument("--govern", action="store_true",
+                    help="attach a PowerGovernor (Step-7 serving loop)")
+    ap.add_argument("--flush-every", type=int, default=8,
+                    help="serve steps between meter flushes")
+    ap.add_argument("--checkpoint-every", type=int, default=16,
+                    help="serve steps between checkpoint boundaries")
+    ap.add_argument("--recon-shape", default="decode_32k",
+                    help="shape the governor's re-search evaluates")
+    ap.add_argument("--ledger-out", default=None,
+                    help="persist the fleet ledger (JSON) here")
+    ap.add_argument("--trace-out", default=None,
+                    help="persist the node's power trace (JSONL) here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    loop = ServeLoop(model, params, batch_slots=args.slots,
-                     max_seq=args.max_seq)
 
+    meter = DecodeEnergyMeter(envelope=envelope_for(V5E))
+    governor = None
+    if args.govern:
+        recon = Reconfigurator(cfg, args.recon_shape,
+                               policy=ReconfigPolicy(),
+                               ga=GAConfig(population=6, generations=2),
+                               node=args.node)
+        governor = PowerGovernor(
+            recon, plan=cfg.plan,
+            policy=GovernorPolicy(flush_every=args.flush_every,
+                                  checkpoint_every=args.checkpoint_every))
+    loop = ServeLoop(model, params, batch_slots=args.slots,
+                     max_seq=args.max_seq, meter=meter, governor=governor,
+                     node=args.node)
+
+    tenants = [t.strip() for t in args.tenants.split(",") if t.strip()] \
+        or ["default"]
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):
         plen = int(rng.integers(4, 12))
         prompt = rng.integers(2, cfg.vocab_size, size=plen).astype(np.int32)
-        req = Request(rid=i, prompt=prompt, max_new=args.max_new)
+        req = Request(rid=i, prompt=prompt, max_new=args.max_new,
+                      tenant=tenants[i % len(tenants)])
         reqs.append(req)
         loop.submit(req)
 
     t0 = time.time()
-    steps = 0
-    while loop.queue or any(r is not None for r in loop.active):
-        loop.step()
-        steps += 1
-        if steps > 10_000:
-            break
+    finished = loop.run()
     wall = time.time() - t0
     n_tok = sum(len(r.out) for r in reqs)
-    for r in reqs:
-        print(f"req {r.rid}: prompt={r.prompt.tolist()[:6]}... "
-              f"out={r.out[:10]} ({len(r.out)} tokens)")
-    print(f"\nserved {len(reqs)} requests, {n_tok} tokens in {wall:.2f}s "
-          f"({n_tok/max(wall,1e-9):.1f} tok/s, {steps} decode steps)")
+    for r in finished:
+        print(f"req {r.rid}: tenant={r.tenant} "
+              f"prompt={r.prompt.tolist()[:6]}... "
+              f"out={r.out[:10]} ({len(r.out)} tokens) "
+              f"{r.prefill_ws:.3f}Ws prefill + {r.decode_ws:.3f}Ws decode")
+    print(f"\nserved {len(finished)} requests, {n_tok} tokens in {wall:.2f}s "
+          f"({n_tok/max(wall,1e-9):.1f} tok/s, {loop.steps_done} decode "
+          f"steps)")
+
+    ledger = governor.ledger if governor is not None else meter.ledger
+    for line in render_rollups(ledger, label=f"energy[{args.node}]"):
+        print(line)
+    if governor is not None:
+        for ev in governor.events:
+            print(f"reconfig @step {ev.step} (detected {ev.detected_step}, "
+                  f"node {ev.node}): drift {ev.drift_ratio:.2f}x -> "
+                  f"plan migration")
+        if not governor.events:
+            print("governor: no energy drift; plan held")
+    if args.ledger_out:
+        print(f"ledger -> {ledger.to_json(args.ledger_out)}")
+    if args.trace_out:
+        print(f"trace  -> {meter.trace.to_jsonl(args.trace_out)}")
 
 
 if __name__ == "__main__":

@@ -9,12 +9,21 @@ Pass a ``repro.telemetry.DecodeEnergyMeter`` to attribute per-request
 Watt*seconds: every prefill/decode step's wall time + slot utilization is
 booked into the meter's trace and ledger, and the step's energy is split
 across the requests that shared the batch (``Request.energy_ws``).
+Requests carry a ``tenant`` label, so the meter's ledger cells double as
+per-tenant energy billing.
+
+Pass a ``repro.telemetry.governor.PowerGovernor`` too and the loop closes
+the paper's Step-7 circuit under serving traffic: every
+``governor.policy.flush_every`` steps the meter's fresh energy rolls into
+the shared fleet ledger and the node's drift monitor; at checkpoint
+boundaries a drift-triggered plan migration is applied (recorded in
+``plan_migrations`` — re-jit/restore is the caller's checkpointed swap).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,9 +51,12 @@ class Request:
     rid: int
     prompt: np.ndarray          # (P,) int32
     max_new: int
+    tenant: str = "default"     # billing label for the energy ledger
     out: list[int] = field(default_factory=list)
     done: bool = False
     energy_ws: float = 0.0      # attributed prefill+decode Watt*seconds
+    prefill_ws: float = 0.0     # ... the prefill share of it
+    decode_ws: float = 0.0      # ... the decode share of it
 
 
 class ServeLoop:
@@ -52,15 +64,31 @@ class ServeLoop:
 
     def __init__(self, model: Model, params, batch_slots: int, max_seq: int,
                  eos_id: int = 1,
-                 meter: Optional[DecodeEnergyMeter] = None):
+                 meter: Optional[DecodeEnergyMeter] = None,
+                 governor: Optional[Any] = None,
+                 node: Optional[str] = None,
+                 clock: Callable[[], float] = time.perf_counter):
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.max_seq = max_seq
         self.eos = eos_id
         self.meter = meter
+        self.governor = governor
+        # node label precedence: an explicit argument re-tags the meter; a
+        # configured meter otherwise keeps (and lends the loop) its own
+        if node is None:
+            node = meter.node if meter is not None else "node0"
+        elif meter is not None:
+            meter.node = node
+        self.node = node
+        # injectable step timer: deterministic tests tick a virtual clock
+        self.clock = clock
         self.queue: list[Request] = []
         self.active: list[Optional[Request]] = [None] * batch_slots
+        self.finished: list[Request] = []
+        self.plan_migrations: list = []     # (step, new_plan) from governor
+        self.steps_done = 0
         self.cache = model.init_cache(batch_slots, max_seq)
         self.pos = np.zeros(batch_slots, np.int32)
         self._decode = jax.jit(make_decode_step(model))
@@ -77,13 +105,15 @@ class ServeLoop:
                 # teacher-forced sequential prefill through the decode path
                 # (single-slot prompts stay short in the examples; production
                 # prefill uses make_prefill on a full batch)
-                t0 = time.perf_counter()
+                t0 = self.clock()
                 for t, tok in enumerate(req.prompt[:-1]):
                     self._step_one(i, int(tok), t)
                 if self.meter is not None:
-                    req.energy_ws += self.meter.observe(
-                        time.perf_counter() - t0, util=1.0 / self.slots,
-                        phase="prefill")
+                    ws = self.meter.observe(
+                        self.clock() - t0, util=1.0 / self.slots,
+                        phase="prefill", tenants=[req.tenant])
+                    req.energy_ws += ws
+                    req.prefill_ws += ws
                 self.pos[i] = len(req.prompt) - 1
                 self._tokens[i, 0] = int(req.prompt[-1])
 
@@ -100,7 +130,7 @@ class ServeLoop:
         if all(r is None for r in self.active):
             return 0
         participants = [r for r in self.active if r is not None]
-        t0 = time.perf_counter()
+        t0 = self.clock()
         pos = int(max(self.pos[i] for i, r in enumerate(self.active)
                       if r is not None))
         batch = {"tokens": jnp.asarray(self._tokens),
@@ -109,11 +139,13 @@ class ServeLoop:
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         if self.meter is not None:
             # the step's Ws splits evenly across the requests in the batch
-            ws = self.meter.observe(time.perf_counter() - t0,
+            ws = self.meter.observe(self.clock() - t0,
                                     util=len(participants) / self.slots,
-                                    phase="decode")
+                                    phase="decode",
+                                    tenants=[r.tenant for r in participants])
             for r in participants:
                 r.energy_ws += ws / len(participants)
+                r.decode_ws += ws / len(participants)
         n_active = 0
         for i, req in enumerate(self.active):
             if req is None:
@@ -126,14 +158,30 @@ class ServeLoop:
                     or self.pos[i] >= self.max_seq - 1:
                 req.done = True
                 self.active[i] = None
+                self.finished.append(req)
             else:
                 n_active += 1
+        self.steps_done += 1
+        if self.governor is not None and self.meter is not None:
+            new_plan = self.governor.tick(self.meter, self.steps_done,
+                                          node=self.node)
+            if new_plan is not None:
+                # checkpointed migration: the caller re-jits/restores with
+                # the new plan; the loop records that the boundary fired
+                self.plan_migrations.append((self.steps_done, new_plan))
         return n_active
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
-        finished: list[Request] = []
+        """Drain queue + active slots; returns requests finished this run."""
+        n0 = len(self.finished)
         for _ in range(max_steps):
             if not self.queue and all(r is None for r in self.active):
                 break
             self.step()
-        return finished
+        if self.governor is not None and self.meter is not None:
+            # drain trailing un-flushed energy so the fleet ledger totals
+            # match the meter at run end; govern=False keeps the partial
+            # tail window out of the drift median
+            self.governor.flush(self.meter, self.steps_done, node=self.node,
+                                govern=False)
+        return self.finished[n0:]

@@ -11,12 +11,17 @@ from repro.telemetry.dvfs import (PowerEnvelope, envelope_for,  # noqa: F401
                                   node_envelope)
 from repro.telemetry.sampler import (ConstantSource,  # noqa: F401
                                      ModeledSource, PowerSampler,
-                                     ReplaySource, synthesize_phase_trace)
-from repro.telemetry.energy import (DecodeEnergyMeter,  # noqa: F401
+                                     ReplaySource, TickClock,
+                                     synthesize_phase_trace)
+from repro.telemetry.energy import (DEFAULT_NODE,  # noqa: F401
+                                    DEFAULT_TENANT, DecodeEnergyMeter,
                                     EnergyLedger, PhaseEnergy)
-from repro.telemetry.compare import (RunEnergy, WsComparison,  # noqa: F401
-                                     ab_sample, compare)
+from repro.telemetry.compare import (RequestEnergy, RunEnergy,  # noqa: F401
+                                     WsComparison, ab_sample, compare)
+from repro.telemetry.governor import (GovernorEvent,  # noqa: F401
+                                      GovernorPolicy, PowerGovernor)
 from repro.telemetry.report import (render_comparison_csv,  # noqa: F401
                                     render_comparison_json,
                                     render_comparison_text,
-                                    render_ledger, render_trace_summary)
+                                    render_ledger, render_rollups,
+                                    render_trace_summary)

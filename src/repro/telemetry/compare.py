@@ -8,6 +8,12 @@ vs 2 s x 111 W = 223 Ws offloaded, a 7.6x energy cut).
 ``RunEnergy`` summarizes one run (from a trace, a verifier measurement, or
 bare numbers); ``WsComparison`` holds the pair plus the derived ratios the
 paper reports: time ratio, Ws ratio, average/peak watts per phase.
+
+Serving mode extends the same report to continuous-batching traffic: a
+``RunEnergy`` built with ``from_serving`` carries per-request
+``RequestEnergy`` rows (prefill/decode Watt*seconds split, tenant label),
+so the Fig. 5 A/B becomes "same request stream, CPU-only node vs offloaded
+node" with an energy bill per request attached.
 """
 from __future__ import annotations
 
@@ -16,6 +22,37 @@ from typing import Callable, Optional
 
 from repro.telemetry.sampler import PowerSampler, PowerSource
 from repro.telemetry.trace import PowerTrace
+
+
+@dataclass(frozen=True)
+class RequestEnergy:
+    """One served request's attributed energy (the per-tenant bill line)."""
+    rid: int
+    tenant: str
+    tokens: int
+    prefill_ws: float
+    decode_ws: float
+
+    @property
+    def ws(self) -> float:
+        return self.prefill_ws + self.decode_ws
+
+    @property
+    def ws_per_token(self) -> float:
+        return self.ws / self.tokens if self.tokens > 0 else 0.0
+
+    @classmethod
+    def from_request(cls, req) -> "RequestEnergy":
+        """From a ``repro.serve.engine.Request`` (duck-typed: needs
+        .rid/.tenant/.out/.prefill_ws/.decode_ws)."""
+        return cls(rid=req.rid, tenant=req.tenant, tokens=len(req.out),
+                   prefill_ws=req.prefill_ws, decode_ws=req.decode_ws)
+
+    def to_dict(self) -> dict:
+        return {"rid": self.rid, "tenant": self.tenant,
+                "tokens": self.tokens, "prefill_ws": self.prefill_ws,
+                "decode_ws": self.decode_ws, "ws": self.ws,
+                "ws_per_token": self.ws_per_token}
 
 
 @dataclass
@@ -28,6 +65,7 @@ class RunEnergy:
     peak_w: float = 0.0
     phases: dict = field(default_factory=dict)   # name -> stats dict
     trace: Optional[PowerTrace] = None
+    requests: list = field(default_factory=list)  # RequestEnergy (serving)
 
     def __post_init__(self) -> None:
         if self.avg_w == 0.0 and self.seconds > 0:
@@ -61,6 +99,15 @@ class RunEnergy:
             return run
         return cls(label=label, seconds=m.seconds, ws=m.energy_j)
 
+    @classmethod
+    def from_serving(cls, label: str, meter, requests) -> "RunEnergy":
+        """Serving mode: the meter's cumulative trace gives the run totals
+        and prefill/decode phase stats; ``requests`` (served
+        ``Request``s) become per-request bill lines."""
+        run = cls.from_trace(label, meter.trace)
+        run.requests = [RequestEnergy.from_request(r) for r in requests]
+        return run
+
 
 @dataclass
 class WsComparison:
@@ -68,6 +115,11 @@ class WsComparison:
     baseline: RunEnergy
     candidate: RunEnergy
     workload: str = ""
+
+    @property
+    def serving(self) -> bool:
+        """True when either side carries per-request bill lines."""
+        return bool(self.baseline.requests or self.candidate.requests)
 
     @property
     def time_ratio(self) -> float:
@@ -97,10 +149,14 @@ class WsComparison:
 
     def to_dict(self) -> dict:
         def run(r: RunEnergy) -> dict:
-            return {"label": r.label, "seconds": r.seconds, "ws": r.ws,
-                    "avg_w": r.avg_w, "peak_w": r.peak_w,
-                    "phases": r.phases}
+            d = {"label": r.label, "seconds": r.seconds, "ws": r.ws,
+                 "avg_w": r.avg_w, "peak_w": r.peak_w,
+                 "phases": r.phases}
+            if r.requests:
+                d["requests"] = [q.to_dict() for q in r.requests]
+            return d
         return {"workload": self.workload,
+                "serving": self.serving,
                 "baseline": run(self.baseline),
                 "candidate": run(self.candidate),
                 "time_ratio": self.time_ratio, "ws_ratio": self.ws_ratio,

@@ -1,12 +1,19 @@
 """Per-phase energy ledger — Watt*seconds aggregated across traces/nodes.
 
 The paper's bottom line is an energy number per run; at fleet scale that
-number must aggregate across chips, nodes and program phases while staying
-comparable between plans.  ``EnergyLedger`` is that accumulator:
+number must aggregate across chips, nodes, tenants and program phases while
+staying comparable between plans.  ``EnergyLedger`` is that accumulator:
 
   * ``add`` / ``absorb`` fold phase-attributed Watt*seconds in (a trace's
     spans map 1:1 onto ledger phases; ``scale`` multiplies per-chip traces
     up to slice totals),
+  * every booking lands in a ``(node, tenant, phase)`` cell, so
+    ``rollup(by="node"|"tenant"|"phase")`` renders the same joules as a
+    fleet view, an energy bill, or a phase profile — and the three rollups
+    all sum to ``total_ws``,
+  * ``merge`` folds another ledger in (per-pod ledgers roll up into one
+    fleet ledger), and ``to_json``/``from_json`` persist the cells so a
+    jax-free reporter can re-render them offline,
   * per-step recording with a rolling window supports the Step-7 monitor:
     ``drift_ratio`` compares the latest step's energy against the rolling
     median, which is what triggers an in-operation re-search (energy drift
@@ -15,16 +22,24 @@ comparable between plans.  ``EnergyLedger`` is that accumulator:
 
 ``DecodeEnergyMeter`` is the serving-side client: it turns measured decode
 step durations + slot utilization into a live trace and per-request energy
-attribution.
+attribution.  Give it a ``source`` to drive watts from a replayed or
+modeled ``PowerSource`` instead of the DVFS envelope — that is how a
+recorded brown-out (or an injected drift tail) flows through the serving
+loop into the governor.
 """
 from __future__ import annotations
 
+import json
 import statistics
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Optional
 
 from repro.telemetry.dvfs import PowerEnvelope
 from repro.telemetry.trace import PowerTrace
+
+DEFAULT_NODE = "node0"
+DEFAULT_TENANT = "default"
 
 
 @dataclass
@@ -38,28 +53,57 @@ class PhaseEnergy:
     def avg_watts(self) -> float:
         return self.ws / self.seconds if self.seconds > 0 else 0.0
 
+    def fold(self, ws: float, seconds: float, count: int = 1,
+             peak_w: float = 0.0) -> None:
+        self.ws += ws
+        self.seconds += seconds
+        self.count += count
+        self.peak_w = max(self.peak_w, peak_w)
+
+    def to_dict(self) -> dict:
+        return {"ws": self.ws, "seconds": self.seconds, "count": self.count,
+                "avg_w": self.avg_watts, "peak_w": self.peak_w}
+
 
 @dataclass
 class EnergyLedger:
-    """Aggregates Watt*seconds by phase and node + rolling step-drift."""
+    """Aggregates Watt*seconds by (node, tenant, phase) + rolling drift."""
     window: int = 16
     phases: dict = field(default_factory=dict)      # name -> PhaseEnergy
     nodes: dict = field(default_factory=dict)       # node -> total ws
+    cells: dict = field(default_factory=dict)       # (node,tenant,phase) ->
     steps: list = field(default_factory=list)       # rolling (seconds, ws)
 
     # -- aggregation ---------------------------------------------------------
 
     def add(self, phase: str, ws: float, seconds: float,
-            peak_w: float = 0.0, node: str = "node0") -> None:
+            peak_w: float = 0.0, node: str = DEFAULT_NODE,
+            tenant: str = DEFAULT_TENANT, count: int = 1) -> None:
         pe = self.phases.setdefault(phase, PhaseEnergy())
-        pe.ws += ws
-        pe.seconds += seconds
-        pe.count += 1
-        pe.peak_w = max(pe.peak_w, peak_w)
+        pe.fold(ws, seconds, count=count, peak_w=peak_w)
         self.nodes[node] = self.nodes.get(node, 0.0) + ws
+        cell = self.cells.setdefault((node, tenant, phase), PhaseEnergy())
+        cell.fold(ws, seconds, count=count, peak_w=peak_w)
+
+    def add_split(self, phase: str, ws: float, seconds: float,
+                  tenants: list, peak_w: float = 0.0,
+                  node: str = DEFAULT_NODE) -> None:
+        """One metered observation whose energy splits evenly across the
+        tenants that shared it.  The phase books a single observation
+        (count=1); each tenant's cell books its share and counts the
+        observation it participated in."""
+        pe = self.phases.setdefault(phase, PhaseEnergy())
+        pe.fold(ws, seconds, count=1, peak_w=peak_w)
+        self.nodes[node] = self.nodes.get(node, 0.0) + ws
+        n = len(tenants)
+        for tenant in tenants:
+            cell = self.cells.setdefault((node, tenant, phase),
+                                         PhaseEnergy())
+            cell.fold(ws / n, seconds / n, count=1, peak_w=peak_w)
 
     def absorb(self, trace: PowerTrace, scale: float = 1.0,
-               node: str = "node0") -> None:
+               node: str = DEFAULT_NODE,
+               tenant: str = DEFAULT_TENANT) -> None:
         """Fold a trace's phases in; ``scale`` lifts per-chip traces to
         slice totals (ws and peak both scale with chips).  Only *leaf*
         spans are booked — umbrella spans (e.g. the synthesized traces'
@@ -81,7 +125,23 @@ class EnergyLedger:
         for s in leaves:
             ws = trace.energy_ws(s.t0, s.t1) * scale
             self.add(s.name, ws, s.seconds,
-                     peak_w=trace.peak_watts(s.t0, s.t1) * scale, node=node)
+                     peak_w=trace.peak_watts(s.t0, s.t1) * scale,
+                     node=node, tenant=tenant)
+
+    def merge(self, other: "EnergyLedger") -> None:
+        """Fold another ledger's cells in (fleet rollup across pods).
+
+        Step windows are *not* merged — drift is a per-monitor signal, not
+        an additive one."""
+        for (node, tenant, phase), cell in other.cells.items():
+            pe = self.phases.setdefault(phase, PhaseEnergy())
+            pe.fold(cell.ws, cell.seconds, count=cell.count,
+                    peak_w=cell.peak_w)
+            self.nodes[node] = self.nodes.get(node, 0.0) + cell.ws
+            mine = self.cells.setdefault((node, tenant, phase),
+                                         PhaseEnergy())
+            mine.fold(cell.ws, cell.seconds, count=cell.count,
+                      peak_w=cell.peak_w)
 
     @property
     def total_ws(self) -> float:
@@ -95,6 +155,59 @@ class EnergyLedger:
         return {n: {"ws": p.ws, "seconds": p.seconds, "count": p.count,
                     "avg_w": p.avg_watts, "peak_w": p.peak_w}
                 for n, p in self.phases.items()}
+
+    # -- rollups (node / tenant / phase views of the same joules) ------------
+
+    def rollup(self, by: str = "node") -> dict:
+        """Aggregate the cells along one dimension.
+
+        Returns ``label -> PhaseEnergy``; whichever dimension is chosen,
+        ws and seconds sum to the ledger totals (same joules, different
+        cut).  ``count`` sums cell bookings, which can exceed the phase
+        observation count when observations were split across tenants."""
+        idx = {"node": 0, "tenant": 1, "phase": 2}
+        if by not in idx:
+            raise ValueError(f"rollup by must be node|tenant|phase, got "
+                             f"{by!r}")
+        out: dict = {}
+        for key, cell in self.cells.items():
+            pe = out.setdefault(key[idx[by]], PhaseEnergy())
+            pe.fold(cell.ws, cell.seconds, count=cell.count,
+                    peak_w=cell.peak_w)
+        return out
+
+    def tenants(self) -> list[str]:
+        seen: list[str] = []
+        for _, tenant, _ in self.cells:
+            if tenant not in seen:
+                seen.append(tenant)
+        return seen
+
+    # -- persistence (jax-free: the offline reporter re-renders these) -------
+
+    def to_json(self, path: str | Path) -> Path:
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        recs = [{"node": n, "tenant": t, "phase": p, "ws": c.ws,
+                 "seconds": c.seconds, "count": c.count, "peak_w": c.peak_w}
+                for (n, t, p), c in sorted(self.cells.items())]
+        path.write_text(json.dumps({"window": self.window, "cells": recs},
+                                   indent=2) + "\n")
+        return path
+
+    @classmethod
+    def from_json(cls, path: str | Path) -> "EnergyLedger":
+        doc = json.loads(Path(path).read_text())
+        led = cls(window=doc.get("window", 16))
+        for r in doc.get("cells", []):
+            pe = PhaseEnergy(ws=r["ws"], seconds=r["seconds"],
+                             count=r.get("count", 1),
+                             peak_w=r.get("peak_w", 0.0))
+            led.cells[(r["node"], r["tenant"], r["phase"])] = pe
+            lp = led.phases.setdefault(r["phase"], PhaseEnergy())
+            lp.fold(pe.ws, pe.seconds, count=pe.count, peak_w=pe.peak_w)
+            led.nodes[r["node"]] = led.nodes.get(r["node"], 0.0) + pe.ws
+        return led
 
     # -- step drift (Step-7 in-operation monitor) ----------------------------
 
@@ -136,18 +249,32 @@ class DecodeEnergyMeter:
     trace on a cumulative decode timeline (duplicate boundary samples keep
     trapezoidal integration exact), and books it into the ledger.  The
     caller divides the returned Ws across the requests that shared the
-    batch.
+    batch; pass ``tenants`` (one label per participating request) to book
+    each request's share into its tenant cell.
+
+    ``source`` overrides the envelope: instantaneous watts come from
+    ``source.watts(t)`` on the meter's cumulative timeline.  A
+    ``ReplaySource`` here replays a recorded node trace through the serving
+    loop — including any drift tail the recording (or a test) carries.
     """
     envelope: PowerEnvelope
     chips: int = 1
+    source: Optional[object] = None     # PowerSource overriding the envelope
+    node: str = DEFAULT_NODE
     trace: PowerTrace = field(default_factory=PowerTrace)
     ledger: EnergyLedger = field(default_factory=EnergyLedger)
     _now: float = 0.0
 
+    def watts_at(self, t: float, util: float = 1.0) -> float:
+        if self.source is not None:
+            return self.source.watts(t) * self.chips
+        return self.envelope.watts(util) * self.chips
+
     def observe(self, seconds: float, util: float = 1.0,
-                phase: str = "decode") -> float:
+                phase: str = "decode",
+                tenants: Optional[list[str]] = None) -> float:
         seconds = max(float(seconds), 0.0)
-        w = self.envelope.watts(util) * self.chips
+        w = self.watts_at(self._now + 0.5 * seconds, util)
         ws = w * seconds
         if seconds > 0:
             t1 = self._now + seconds
@@ -155,5 +282,9 @@ class DecodeEnergyMeter:
             self.trace.add(t1, w)
             self.trace.mark_phase(phase, self._now, t1)
             self._now = t1
-        self.ledger.add(phase, ws, seconds, peak_w=w)
+        if tenants:
+            self.ledger.add_split(phase, ws, seconds, tenants, peak_w=w,
+                                  node=self.node)
+        else:
+            self.ledger.add(phase, ws, seconds, peak_w=w, node=self.node)
         return ws

@@ -1,0 +1,211 @@
+"""Power governor — the serving side of Step-7 in-operation reconfiguration.
+
+PR 1 left the loop open: ``ServeLoop`` booked per-request Watt*seconds into
+a ``DecodeEnergyMeter`` that nothing downstream read, so serving-power
+drift could never trigger a re-search.  ``PowerGovernor`` closes it:
+
+    ServeLoop --(meter flush every N steps)--> fleet EnergyLedger
+        --(per-node drift window)--> Reconfigurator.observe
+        --(new plan, deferred)--> plan migration at a checkpoint boundary
+
+  * ``flush`` drains the *delta* of a node's meter ledger since the last
+    flush into the shared fleet ledger (the (node, tenant, phase) cells
+    carry per-tenant billing through unchanged) and feeds the window's
+    energy into that node's own ``Reconfigurator`` — each node keeps its
+    own rolling median, so a throttling node trips on its own history, not
+    on the fleet average;
+  * a triggered re-search does NOT swap the plan mid-flight: the new plan
+    parks as *pending* until the next checkpoint boundary, where
+    ``checkpoint`` emits a ``GovernorEvent`` and updates ``plan`` — the
+    caller restores weights + re-jits there, exactly the checkpointed plan
+    migration the FT driver supports;
+  * ``tick`` is the single hook a serving loop calls once per decode step;
+    it applies both cadences (``flush_every``, ``checkpoint_every``).
+
+The governor is deliberately jax-free: it moves numbers, not arrays, so it
+runs in the serving control thread (or a separate process reading flushed
+ledgers) without touching the device.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.telemetry.energy import (DEFAULT_NODE, DecodeEnergyMeter,
+                                    EnergyLedger)
+
+
+@dataclass(frozen=True)
+class GovernorPolicy:
+    flush_every: int = 8        # serve steps between meter flushes
+    checkpoint_every: int = 16  # serve steps between checkpoint boundaries
+    # phases whose energy feeds the drift monitor (the fleet ledger books
+    # every phase regardless).  Steady-state decode is the drift signal;
+    # prefill bursts are workload — a newly admitted request's prefill
+    # must not read as a power anomaly.  () watches every phase.
+    drift_phases: tuple = ("decode",)
+
+    def __post_init__(self) -> None:
+        if self.flush_every < 1 or self.checkpoint_every < 1:
+            raise ValueError("governor cadences must be >= 1 step")
+
+
+@dataclass(frozen=True)
+class GovernorEvent:
+    """One applied plan migration (drift detected, swapped at checkpoint)."""
+    step: int                   # serve step of the checkpoint that applied it
+    detected_step: int          # serve step whose flush tripped the drift
+    node: str
+    drift_ratio: float
+    window_ws: float
+    median_ws: float
+    old_plan: str
+    new_plan: str
+
+    def to_dict(self) -> dict:
+        return {"step": self.step, "detected_step": self.detected_step,
+                "node": self.node, "drift_ratio": self.drift_ratio,
+                "window_ws": self.window_ws, "median_ws": self.median_ws,
+                "old_plan": self.old_plan, "new_plan": self.new_plan}
+
+
+@dataclass
+class _Pending:
+    detected_step: int
+    node: str
+    drift_ratio: float
+    window_ws: float
+    median_ws: float
+    plan: object
+
+
+class PowerGovernor:
+    """Watches per-node serving energy and migrates the plan on drift.
+
+    Wraps a ``repro.core.adapt.Reconfigurator``: the given instance governs
+    its first node, and additional nodes get monitors cloned from it via
+    ``Reconfigurator.for_node`` (same policy/search config, fresh rolling
+    window).  ``ledger`` is the shared fleet ledger every flush rolls into.
+    """
+
+    def __init__(self, reconfigurator, plan=None,
+                 policy: Optional[GovernorPolicy] = None,
+                 ledger: Optional[EnergyLedger] = None):
+        self.policy = policy or GovernorPolicy()
+        self.ledger = ledger if ledger is not None else EnergyLedger()
+        self.plan = plan if plan is not None else reconfigurator.cfg.plan
+        self.events: list[GovernorEvent] = []
+        # serving flush windows are not verifier-comparable step seconds:
+        # the re-search must select on fitness, not a median-derived
+        # latency bound in the wrong unit domain
+        reconfigurator.derive_requirement = False
+        self._proto = reconfigurator
+        self._monitors: dict = {}          # node -> Reconfigurator
+        self._snapshots: dict = {}         # node -> {cell: (ws, s, count)}
+        self._pending: dict = {}           # node -> _Pending
+
+    # -- monitors ------------------------------------------------------------
+
+    def monitor(self, node: str):
+        """The node's own Reconfigurator (the prototype serves the node it
+        was built for; other nodes get clones with their own history)."""
+        if node not in self._monitors:
+            self._monitors[node] = self._proto \
+                if self._proto.node == node else self._proto.for_node(node)
+        return self._monitors[node]
+
+    # -- measurement ingestion -----------------------------------------------
+
+    def flush(self, meter: DecodeEnergyMeter, step: int,
+              node: Optional[str] = None,
+              govern: bool = True) -> Optional[_Pending]:
+        """Drain the meter's un-flushed energy into the fleet ledger and
+        feed the window into the node's drift monitor.  Returns the newly
+        parked pending migration, if this flush tripped one.
+
+        ``govern=False`` books the energy without judging drift — for
+        run-end drains whose partial tail window would otherwise pollute
+        the rolling median (and whose trigger no checkpoint could ever
+        apply)."""
+        node = node or getattr(meter, "node", DEFAULT_NODE)
+        snap = self._snapshots.setdefault(node, {})
+        window_ws = window_s = 0.0
+        for key, cell in meter.ledger.cells.items():
+            ws0, s0, c0 = snap.get(key, (0.0, 0.0, 0))
+            d_ws, d_s, d_c = cell.ws - ws0, cell.seconds - s0, \
+                cell.count - c0
+            if d_c <= 0 and d_ws == 0.0:
+                continue
+            _, tenant, phase = key
+            self.ledger.add(phase, d_ws, d_s, peak_w=cell.peak_w,
+                            node=node, tenant=tenant, count=max(d_c, 1))
+            snap[key] = (cell.ws, cell.seconds, cell.count)
+            if not self.policy.drift_phases \
+                    or phase in self.policy.drift_phases:
+                window_ws += d_ws
+                window_s += d_s
+        if (window_s <= 0 and window_ws <= 0) or not govern:
+            return None
+        new_plan = self.monitor(node).observe(step, window_s, self.plan,
+                                              energy_ws=window_ws)
+        if new_plan is not None:
+            ev = self.monitor(node).events[-1]
+            self._pending[node] = _Pending(detected_step=step, node=node,
+                                           drift_ratio=ev["drift_ratio"],
+                                           window_ws=window_ws,
+                                           median_ws=ev["median_ws"],
+                                           plan=new_plan)
+            return self._pending[node]
+        return None
+
+    # -- checkpoint boundary -------------------------------------------------
+
+    @property
+    def pending(self) -> Optional[_Pending]:
+        """The most recently parked pending migration (None when empty);
+        every parked node is applied at the next checkpoint."""
+        if not self._pending:
+            return None
+        return next(reversed(list(self._pending.values())))
+
+    def checkpoint(self, step: int):
+        """Apply every pending migration (one event per drifted node).
+        Returns the new plan when any was applied (the caller re-jits +
+        restores there), else None."""
+        if not self._pending:
+            return None
+        parked, self._pending = self._pending, {}
+        applied = None
+        for p in parked.values():
+            self.events.append(GovernorEvent(
+                step=step, detected_step=p.detected_step, node=p.node,
+                drift_ratio=p.drift_ratio, window_ws=p.window_ws,
+                median_ws=p.median_ws,
+                old_plan=self.plan.describe(), new_plan=p.plan.describe()))
+            self.plan = p.plan
+            applied = p.plan
+        return applied
+
+    # -- the single serving hook ---------------------------------------------
+
+    def tick(self, meter: DecodeEnergyMeter, step: int,
+             node: Optional[str] = None):
+        """Call once per serve step; applies both cadences.  Returns the
+        new plan when this step's checkpoint applied a migration."""
+        if step % self.policy.flush_every == 0:
+            self.flush(meter, step, node=node)
+        if step % self.policy.checkpoint_every == 0:
+            return self.checkpoint(step)
+        return None
+
+    # -- reporting -----------------------------------------------------------
+
+    def summary(self) -> dict:
+        return {"plan": self.plan.describe(),
+                "total_ws": self.ledger.total_ws,
+                "nodes": {n: pe.ws
+                          for n, pe in self.ledger.rollup("node").items()},
+                "tenants": {t: pe.ws
+                            for t, pe in
+                            self.ledger.rollup("tenant").items()},
+                "events": [e.to_dict() for e in self.events]}

@@ -18,9 +18,12 @@ def _phase_rows(run: RunEnergy) -> list[tuple[str, dict]]:
 
 
 def render_comparison_text(cmp: WsComparison) -> list[str]:
-    """Fig. 5-style human-readable table."""
+    """Fig. 5-style human-readable table (per-request rows in serving
+    mode)."""
     head = f"Ws comparison — {cmp.workload}" if cmp.workload \
         else "Ws comparison"
+    if cmp.serving:
+        head += " [serving]"
     lines = [head,
              f"{'destination':<28} {'seconds':>9} {'Ws':>10} "
              f"{'avg W':>7} {'peak W':>7}"]
@@ -31,6 +34,11 @@ def render_comparison_text(cmp: WsComparison) -> list[str]:
             lines.append(f"  · {name:<24} {st['seconds']:>9.3f} "
                          f"{st['ws']:>10.1f} {st['avg_w']:>7.1f} "
                          f"{st['peak_w']:>7.1f}")
+        for q in run.requests:
+            lines.append(f"  req {q.rid:<4} tenant={q.tenant:<12} "
+                         f"{q.tokens:>4}tok prefill={q.prefill_ws:>8.2f}Ws "
+                         f"decode={q.decode_ws:>8.2f}Ws "
+                         f"({q.ws_per_token:.3f}Ws/tok)")
     lines.append(f"time_ratio={cmp.time_ratio:.3f} "
                  f"ws_ratio={cmp.ws_ratio:.3f} "
                  f"power_ratio={cmp.power_ratio:.3f} "
@@ -52,6 +60,11 @@ def render_comparison_csv(cmp: WsComparison) -> list[str]:
             lines.append(f"ws_compare,{wl},{run.label},{name},"
                          f"{st['seconds']:.4f},{st['ws']:.2f},"
                          f"{st['avg_w']:.1f},{st['peak_w']:.1f}")
+        for q in run.requests:
+            lines.append(f"ws_request,{wl},{run.label},"
+                         f"rid={q.rid},tenant={q.tenant},"
+                         f"tokens={q.tokens},prefill_ws={q.prefill_ws:.3f},"
+                         f"decode_ws={q.decode_ws:.3f},ws={q.ws:.3f}")
     lines.append(f"ws_compare,{wl},derived,ratios,"
                  f"time_ratio={cmp.time_ratio:.3f},"
                  f"ws_ratio={cmp.ws_ratio:.3f},"
@@ -87,4 +100,22 @@ def render_ledger(ledger: EnergyLedger, label: str = "ledger") -> list[str]:
                      f"x{st['count']}")
     for node, ws in sorted(ledger.nodes.items()):
         lines.append(f"  node {node}: {ws:.1f}Ws")
+    return lines
+
+
+def render_rollups(ledger: EnergyLedger, label: str = "fleet") -> list[str]:
+    """The three cuts of the same joules: node, tenant, phase.  Each cut's
+    rows sum to the ledger total — the fleet view, the energy bill, and
+    the phase profile of one run."""
+    lines = [f"{label}: total={ledger.total_ws:.1f}Ws "
+             f"over {ledger.total_seconds:.3f}s busy"]
+    for by in ("node", "tenant", "phase"):
+        roll = ledger.rollup(by)
+        if not roll:
+            continue
+        lines.append(f"  by {by}:")
+        for name, pe in sorted(roll.items(), key=lambda kv: -kv[1].ws):
+            lines.append(f"    {name:<22} {pe.seconds:>9.3f}s "
+                         f"{pe.ws:>10.2f}Ws {pe.avg_watts:>7.1f}W avg "
+                         f"peak={pe.peak_w:.1f}W x{pe.count}")
     return lines

@@ -138,6 +138,25 @@ class PowerSampler:
         return result, trace
 
 
+class TickClock:
+    """Deterministic virtual timer: every call advances one fixed tick.
+
+    Inject wherever a wall clock would jitter a measurement — e.g.
+    ``ServeLoop(clock=TickClock(dt))``: the loop brackets each metered
+    window with two clock calls, so every window spans exactly ``dt``
+    virtual seconds regardless of host noise (benchmarks and the
+    drift-injection tests both depend on that determinism).
+    """
+
+    def __init__(self, dt: float):
+        self.now = 0.0
+        self.dt = float(dt)
+
+    def __call__(self) -> float:
+        self.now += self.dt
+        return self.now
+
+
 # ---------------------------------------------------------------------------
 # Synthesized traces — the analytic verifier rung has no wall clock to
 # sample, so its trace is constructed from the roofline decomposition.

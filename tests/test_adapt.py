@@ -90,6 +90,94 @@ def test_reconfigurator_cooldown():
     assert r.observe(6, 5.0, cfg.plan) is None       # cooldown holds
 
 
+def test_reconfigurator_first_step_never_triggers():
+    """No rolling median yet: even an absurd first step only seeds the
+    window."""
+    cfg = get_config("qwen2-7b")
+    r = Reconfigurator(cfg, "train_4k",
+                       policy=ReconfigPolicy(degrade_factor=1.1, window=4,
+                                             cooldown_steps=0))
+    assert r.observe(0, 1e6, cfg.plan, energy_ws=1e9) is None
+    assert not r.events
+    assert r.ledger.steps == [(1e6, 1e9)]
+
+
+def test_reconfigurator_drift_exactly_at_factor_holds():
+    """The trigger is strictly greater-than: ratio == degrade_factor must
+    not reconfigure; an epsilon above it must."""
+    cfg = get_config("qwen2-7b")
+
+    def fresh():
+        return Reconfigurator(cfg, "train_4k",
+                              policy=ReconfigPolicy(degrade_factor=1.5,
+                                                    window=4,
+                                                    cooldown_steps=0),
+                              ga=GAConfig(population=4, generations=1))
+
+    r = fresh()
+    for i in range(4):
+        r.observe(i, 1.0, cfg.plan, energy_ws=200.0)
+    assert r.observe(5, 1.0, cfg.plan, energy_ws=300.0) is None  # == 1.5x
+    r2 = fresh()
+    for i in range(4):
+        r2.observe(i, 1.0, cfg.plan, energy_ws=200.0)
+    assert r2.observe(5, 1.0, cfg.plan, energy_ws=300.1) is not None
+
+
+def test_reconfigurator_cooldown_expires():
+    """Suppressed during cooldown, armed again right after it."""
+    cfg = get_config("qwen2-7b")
+    r = Reconfigurator(cfg, "train_4k",
+                       policy=ReconfigPolicy(degrade_factor=1.2, window=2,
+                                             cooldown_steps=10),
+                       ga=GAConfig(population=4, generations=1))
+    for i in range(2):
+        r.observe(i, 1.0, cfg.plan, energy_ws=100.0)
+    assert r.observe(3, 1.0, cfg.plan, energy_ws=500.0) is not None
+    # rebuild a baseline, then drift again inside the cooldown window
+    for i in range(4, 6):
+        r.observe(i, 1.0, cfg.plan, energy_ws=100.0)
+    assert r.observe(7, 1.0, cfg.plan, energy_ws=500.0) is None
+    # ... and once more past it
+    for i in range(8, 12):
+        r.observe(i, 1.0, cfg.plan, energy_ws=100.0)
+    assert r.observe(14, 1.0, cfg.plan, energy_ws=500.0) is not None
+    assert len(r.events) == 2
+
+
+def test_reconfigurator_unmetered_fallback_uses_nominal_watts():
+    """energy_ws=None books seconds x nominal_watts, so pure time
+    degradation drifts the ledger identically to an energy meter."""
+    cfg = get_config("qwen2-7b")
+    r = Reconfigurator(cfg, "train_4k",
+                       policy=ReconfigPolicy(degrade_factor=1.5, window=4,
+                                             cooldown_steps=0),
+                       ga=GAConfig(population=4, generations=1),
+                       nominal_watts=200.0)
+    for i in range(4):
+        assert r.observe(i, 1.0, cfg.plan) is None
+    assert r.ledger.steps == [(1.0, 200.0)] * 4
+    new = r.observe(5, 3.0, cfg.plan)           # 3x slower, un-metered
+    assert new is not None
+    assert r.events[0]["energy_ws"] == pytest.approx(600.0)
+    assert r.events[0]["drift_ratio"] == pytest.approx(3.0)
+
+
+def test_reconfigurator_for_node_is_independent():
+    cfg = get_config("qwen2-7b")
+    r = Reconfigurator(cfg, "train_4k",
+                       policy=ReconfigPolicy(degrade_factor=1.5, window=4,
+                                             cooldown_steps=0),
+                       ga=GAConfig(population=4, generations=1))
+    other = r.for_node("pod7")
+    assert other.node == "pod7" and other.policy is r.policy
+    assert other.ledger is not r.ledger and other.events is not r.events
+    for i in range(4):
+        r.observe(i, 1.0, cfg.plan, energy_ws=100.0)
+    assert other.ledger.steps == []             # histories don't mix
+    assert other.observe(5, 1.0, cfg.plan, energy_ws=500.0) is None
+
+
 def test_cost_model_components():
     from repro.core.verifier import Measurement
     m = Measurement(seconds=2.0, watts=100.0, energy_j=2.0 * 100 * 256)

@@ -1,0 +1,301 @@
+"""Power-governed serving: ServeLoop -> EnergyLedger -> Reconfigurator.
+
+The acceptance loop for the Step-7 serving circuit: tenant-tagged requests
+meter per-request Ws, flushes roll into a fleet ledger whose
+node/tenant/phase rollups all sum to the same joules, and an injected
+power drift (replay source with a boost-watts tail) triggers exactly one
+checkpointed plan migration.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.adapt import ReconfigPolicy, Reconfigurator
+from repro.core.ga import GAConfig
+from repro.core.power import V5E
+from repro.telemetry import (DecodeEnergyMeter, EnergyLedger,
+                             GovernorPolicy, PowerGovernor, ReplaySource,
+                             TickClock, envelope_for)
+
+TICK = 0.005
+
+
+def _recon(cfg, node="node0", **policy_kw):
+    kw = dict(degrade_factor=1.5, window=8, cooldown_steps=10_000)
+    kw.update(policy_kw)
+    return Reconfigurator(cfg, "decode_32k", policy=ReconfigPolicy(**kw),
+                          ga=GAConfig(population=4, generations=1),
+                          node=node)
+
+
+# ---------------------------------------------------------------------------
+# Ledger rollups / merge / persistence
+# ---------------------------------------------------------------------------
+
+def test_rollups_all_sum_to_total():
+    led = EnergyLedger()
+    led.add("prefill", 10.0, 0.1, node="n0", tenant="a")
+    led.add("decode", 30.0, 0.3, node="n0", tenant="b")
+    led.add("decode", 20.0, 0.2, node="n1", tenant="a")
+    assert led.total_ws == pytest.approx(60.0)
+    for by in ("node", "tenant", "phase"):
+        roll = led.rollup(by)
+        assert sum(pe.ws for pe in roll.values()) == \
+            pytest.approx(led.total_ws), by
+        assert sum(pe.seconds for pe in roll.values()) == \
+            pytest.approx(led.total_seconds), by
+    assert led.rollup("node")["n0"].ws == pytest.approx(40.0)
+    assert led.rollup("tenant")["a"].ws == pytest.approx(30.0)
+    assert led.rollup("phase")["decode"].ws == pytest.approx(50.0)
+    with pytest.raises(ValueError):
+        led.rollup("chip")
+
+
+def test_ledger_merge_is_fleet_rollup():
+    a, b = EnergyLedger(), EnergyLedger()
+    a.add("decode", 10.0, 0.1, node="pod0", tenant="t0", peak_w=120.0)
+    b.add("decode", 20.0, 0.2, node="pod1", tenant="t0", peak_w=150.0)
+    b.add("prefill", 5.0, 0.05, node="pod1", tenant="t1")
+    fleet = EnergyLedger()
+    fleet.merge(a)
+    fleet.merge(b)
+    assert fleet.total_ws == pytest.approx(35.0)
+    assert fleet.nodes["pod0"] == pytest.approx(10.0)
+    assert fleet.nodes["pod1"] == pytest.approx(25.0)
+    assert fleet.rollup("tenant")["t0"].ws == pytest.approx(30.0)
+    assert fleet.phases["decode"].peak_w == pytest.approx(150.0)
+    # merging is additive and keeps the cell dimensions intact
+    assert set(fleet.cells) == set(a.cells) | set(b.cells)
+
+
+def test_ledger_json_roundtrip(tmp_path):
+    led = EnergyLedger(window=4)
+    led.add("decode", 12.5, 0.25, peak_w=180.0, node="n0", tenant="teamA")
+    led.add("prefill", 2.5, 0.05, node="n1", tenant="teamB", count=3)
+    p = led.to_json(tmp_path / "fleet.json")
+    led2 = EnergyLedger.from_json(p)
+    assert led2.window == 4
+    assert led2.total_ws == pytest.approx(led.total_ws)
+    assert set(led2.cells) == set(led.cells)
+    for key, cell in led.cells.items():
+        got = led2.cells[key]
+        assert got.ws == pytest.approx(cell.ws)
+        assert got.seconds == pytest.approx(cell.seconds)
+        assert got.count == cell.count
+        assert got.peak_w == pytest.approx(cell.peak_w)
+    assert led2.nodes == pytest.approx(led.nodes)
+    assert {t for t in led2.tenants()} == {"teamA", "teamB"}
+
+
+# ---------------------------------------------------------------------------
+# Meter: tenant splitting + source override
+# ---------------------------------------------------------------------------
+
+def test_meter_tenant_split_conserves_energy():
+    meter = DecodeEnergyMeter(envelope=envelope_for(V5E), node="n0")
+    ws = meter.observe(0.1, util=1.0, phase="decode",
+                       tenants=["a", "a", "b"])
+    assert ws == pytest.approx(meter.ledger.total_ws)
+    roll = meter.ledger.rollup("tenant")
+    assert roll["a"].ws == pytest.approx(2.0 * ws / 3.0)
+    assert roll["b"].ws == pytest.approx(ws / 3.0)
+    assert meter.trace.energy_ws() == pytest.approx(ws)
+    # one metered observation stays ONE phase count, however many shares
+    assert meter.ledger.phases["decode"].count == 1
+    assert meter.ledger.cells[("n0", "b", "decode")].count == 1
+
+
+def test_meter_source_overrides_envelope():
+    src = ReplaySource([(0.0, 100.0), (1.0, 400.0)])
+    meter = DecodeEnergyMeter(envelope=envelope_for(V5E), source=src)
+    ws0 = meter.observe(0.5)              # mid-window 0.25 -> 100 W
+    ws1 = meter.observe(1.0)              # mid-window 1.0  -> 400 W
+    assert ws0 == pytest.approx(50.0)
+    assert ws1 == pytest.approx(400.0)
+    assert meter.trace.energy_ws() == pytest.approx(meter.ledger.total_ws)
+
+
+# ---------------------------------------------------------------------------
+# Governor mechanics (no jax): pending parks until the checkpoint boundary
+# ---------------------------------------------------------------------------
+
+def test_governor_policy_validates():
+    with pytest.raises(ValueError):
+        GovernorPolicy(flush_every=0)
+    with pytest.raises(ValueError):
+        GovernorPolicy(checkpoint_every=0)
+
+
+def test_governor_defers_migration_to_checkpoint():
+    cfg = get_config("tiny-test")
+    gov = PowerGovernor(_recon(cfg), plan=cfg.plan,
+                        policy=GovernorPolicy(flush_every=1,
+                                              checkpoint_every=100))
+    meter = DecodeEnergyMeter(envelope=envelope_for(V5E), node="n0")
+    for step in range(1, 5):              # stable baseline windows
+        meter.observe(0.01, util=1.0)
+        gov.flush(meter, step, node="n0")
+    assert gov.pending is None
+    meter.observe(0.05, util=1.0)         # 5x energy window
+    gov.flush(meter, 5, node="n0")
+    assert gov.pending is not None        # drift tripped...
+    assert not gov.events                 # ...but nothing applied yet
+    old = gov.plan
+    new = gov.checkpoint(100)
+    assert new is not None and gov.plan is new
+    assert len(gov.events) == 1
+    ev = gov.events[0]
+    assert ev.step == 100 and ev.detected_step == 5 and ev.node == "n0"
+    assert ev.drift_ratio > 1.5
+    assert ev.old_plan == old.describe()
+    assert gov.pending is None
+    assert gov.checkpoint(200) is None    # boundary with nothing pending
+
+
+def test_governor_keeps_per_node_monitors():
+    cfg = get_config("tiny-test")
+    recon = _recon(cfg, node="podA")
+    gov = PowerGovernor(recon, plan=cfg.plan)
+    ma = DecodeEnergyMeter(envelope=envelope_for(V5E), node="podA")
+    mb = DecodeEnergyMeter(envelope=envelope_for(V5E), node="podB")
+    assert gov.monitor("podA") is recon       # proto serves its own node
+    assert gov.monitor("podB") is not recon
+    assert gov.monitor("podB").node == "podB"
+    # serving windows aren't verifier-comparable seconds: no monitor may
+    # derive a latency requirement from them
+    assert not gov.monitor("podA").derive_requirement
+    assert not gov.monitor("podB").derive_requirement
+    for step in range(1, 5):
+        ma.observe(0.01)
+        mb.observe(0.01)
+        gov.flush(ma, step, node="podA")
+        gov.flush(mb, step, node="podB")
+    mb.observe(0.05)                          # drift only on podB
+    ma.observe(0.01)
+    gov.flush(ma, 5, node="podA")
+    gov.flush(mb, 5, node="podB")
+    assert gov.pending is not None and gov.pending.node == "podB"
+    # fleet ledger saw both nodes; each node's joules stayed separate
+    assert gov.ledger.nodes["podA"] == pytest.approx(
+        ma.ledger.total_ws)
+    assert gov.ledger.nodes["podB"] == pytest.approx(
+        mb.ledger.total_ws)
+
+
+def test_checkpoint_applies_every_pending_node():
+    """Two nodes drifting between checkpoints must both migrate — the
+    second detection must not overwrite the first."""
+    cfg = get_config("tiny-test")
+    gov = PowerGovernor(_recon(cfg), plan=cfg.plan)
+    ma = DecodeEnergyMeter(envelope=envelope_for(V5E), node="podA")
+    mb = DecodeEnergyMeter(envelope=envelope_for(V5E), node="podB")
+    for step in range(1, 5):
+        ma.observe(0.01)
+        mb.observe(0.01)
+        gov.flush(ma, step, node="podA")
+        gov.flush(mb, step, node="podB")
+    ma.observe(0.05)                          # both nodes drift ...
+    mb.observe(0.06)
+    gov.flush(ma, 5, node="podA")
+    gov.flush(mb, 5, node="podB")             # ... before one checkpoint
+    assert gov.checkpoint(8) is not None
+    assert sorted(e.node for e in gov.events) == ["podA", "podB"]
+    assert gov.pending is None
+
+
+def test_drain_flush_books_energy_without_governing():
+    """govern=False (the run-end drain) completes the fleet ledger but
+    keeps the partial tail window out of the drift median."""
+    cfg = get_config("tiny-test")
+    gov = PowerGovernor(_recon(cfg), plan=cfg.plan)
+    meter = DecodeEnergyMeter(envelope=envelope_for(V5E), node="n0")
+    meter.observe(0.05)
+    gov.flush(meter, 1, node="n0", govern=False)
+    assert gov.ledger.total_ws == pytest.approx(meter.ledger.total_ws)
+    assert gov.monitor("n0").ledger.steps == []
+    assert gov.pending is None
+
+
+def test_governor_flush_is_incremental():
+    """Re-flushing without new energy must not double-book or dilute."""
+    cfg = get_config("tiny-test")
+    gov = PowerGovernor(_recon(cfg), plan=cfg.plan)
+    meter = DecodeEnergyMeter(envelope=envelope_for(V5E), node="n0")
+    meter.observe(0.01)
+    gov.flush(meter, 1, node="n0")
+    total = gov.ledger.total_ws
+    gov.flush(meter, 2, node="n0")            # nothing new
+    gov.flush(meter, 3, node="n0")
+    assert gov.ledger.total_ws == pytest.approx(total)
+    assert len(gov.monitor("n0").ledger.steps) == 1   # idle flushes ignored
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: tiny ServeLoop + governor + injected drift (the acceptance
+# criterion)
+# ---------------------------------------------------------------------------
+
+def test_governed_serving_end_to_end(rng_key):
+    from repro.models.model import Model
+    from repro.serve.engine import Request, ServeLoop
+
+    cfg = get_config("tiny-test")
+    model = Model(cfg)
+    params = model.init(rng_key)
+
+    # replay source with a boost-watts tail: 150 W until 0.06 s of serving
+    # busy-time, 450 W after — a thermal brown-out on the node
+    src = ReplaySource([(0.0, 150.0), (0.06, 450.0)])
+    meter = DecodeEnergyMeter(envelope=envelope_for(V5E), source=src)
+    gov = PowerGovernor(_recon(cfg), plan=cfg.plan,
+                        policy=GovernorPolicy(flush_every=2,
+                                              checkpoint_every=4))
+    loop = ServeLoop(model, params, batch_slots=4, max_seq=64,
+                     eos_id=-1,              # deterministic request length
+                     meter=meter, governor=gov, node="n0",
+                     clock=TickClock(TICK))
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(4):
+        prompt = rng.integers(2, cfg.vocab_size, size=4).astype(np.int32)
+        req = Request(rid=i, prompt=prompt, max_new=12,
+                      tenant=f"tenant{i % 2}")
+        reqs.append(req)
+        loop.submit(req)
+    finished = loop.run()
+
+    # serving completed deterministically
+    assert len(finished) == 4 and all(r.done for r in reqs)
+    assert all(len(r.out) == 12 for r in reqs)
+    assert loop.steps_done == 12
+
+    # per-request attribution: prefill + decode splits sum per request,
+    # and all requests together match the meter's books
+    for r in reqs:
+        assert r.energy_ws == pytest.approx(r.prefill_ws + r.decode_ws)
+    assert sum(r.energy_ws for r in reqs) == \
+        pytest.approx(meter.ledger.total_ws, rel=1e-9)
+
+    # the run-end drain makes the fleet ledger complete: per-tenant
+    # rollups sum to the ledger total, which equals the meter's total
+    assert gov.ledger.total_ws == pytest.approx(meter.ledger.total_ws,
+                                                rel=1e-9)
+    by_tenant = gov.ledger.rollup("tenant")
+    assert set(by_tenant) == {"tenant0", "tenant1"}
+    assert sum(pe.ws for pe in by_tenant.values()) == \
+        pytest.approx(gov.ledger.total_ws, rel=1e-9)
+    # ... and per-tenant ledger cells agree with per-request attribution
+    for t in ("tenant0", "tenant1"):
+        want = sum(r.energy_ws for r in reqs if r.tenant == t)
+        assert by_tenant[t].ws == pytest.approx(want, rel=1e-9)
+
+    # the injected drift triggered exactly one reconfiguration event,
+    # applied at a checkpoint boundary; the long cooldown holds after
+    assert len(gov.events) == 1
+    ev = gov.events[0]
+    assert ev.node == "n0"
+    assert ev.drift_ratio > 1.5
+    assert ev.step % gov.policy.checkpoint_every == 0
+    assert ev.detected_step <= ev.step
+    assert loop.plan_migrations == [(ev.step, gov.plan)]
+    assert gov.plan.describe() == ev.new_plan

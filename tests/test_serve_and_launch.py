@@ -1,6 +1,7 @@
 """Serving loop end-to-end + launch helpers."""
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models.model import Model
@@ -28,6 +29,40 @@ def test_serve_loop_continuous_batching(rng_key):
     assert all(r.done for r in reqs)
     assert all(1 <= len(r.out) <= 6 for r in reqs)
     assert all(0 <= t < cfg.vocab_size for r in reqs for t in r.out)
+
+
+def test_serve_loop_run_returns_finished_requests(rng_key):
+    """Regression: ``run`` used to return [] even though requests
+    completed — finished requests must come back with their outputs and
+    attributed energy."""
+    from repro.core.power import V5E
+    from repro.telemetry import DecodeEnergyMeter, envelope_for
+    cfg = get_config("tiny-test")
+    model = Model(cfg)
+    params = model.init(rng_key)
+    meter = DecodeEnergyMeter(envelope=envelope_for(V5E), node="gpu1")
+    loop = ServeLoop(model, params, batch_slots=2, max_seq=64, meter=meter)
+    assert loop.node == "gpu1" and meter.node == "gpu1"   # label adopted
+    rng = np.random.default_rng(1)
+    reqs = []
+    for i in range(5):                      # more requests than slots
+        prompt = rng.integers(2, cfg.vocab_size, size=5).astype(np.int32)
+        r = Request(rid=i, prompt=prompt, max_new=4, tenant="t")
+        reqs.append(r)
+        loop.submit(r)
+    finished = loop.run()
+    assert sorted(r.rid for r in finished) == [0, 1, 2, 3, 4]
+    assert all(r.done for r in finished)
+    assert all(1 <= len(r.out) <= 4 for r in finished)
+    assert all(r.energy_ws > 0 for r in finished)
+    assert sum(r.energy_ws for r in finished) == \
+        pytest.approx(meter.ledger.total_ws, rel=1e-9)
+    # a second run() serves new traffic only
+    extra = Request(rid=9, prompt=reqs[0].prompt, max_new=3)
+    loop.submit(extra)
+    second = loop.run()
+    assert [r.rid for r in second] == [9]
+    assert len(loop.finished) == 6
 
 
 def test_microbatch_clamp():

@@ -89,6 +89,27 @@ def test_ring_buffer_eviction_conserves_total_energy():
     assert ring.duration == pytest.approx(full.duration, rel=1e-9)
 
 
+def test_ring_wraparound_keeps_retained_phase_attribution():
+    """Eviction must not corrupt phase energy for windows still inside
+    the ring (deterministic twin of the hypothesis property)."""
+    full = PowerTrace()
+    ring = PowerTrace(maxlen=6)
+    for k in range(30):
+        t = 0.5 * k
+        w = 100.0 + 10.0 * (k % 3)
+        full.add(t, w)
+        ring.add(t, w)
+    for tr in (full, ring):
+        tr.mark_phase("tail", 0.5 * 24, 0.5 * 29)   # retained window
+        tr.mark_phase("gone", 0.0, 2.0)             # fully evicted window
+    assert ring.phase_energy("tail") == \
+        pytest.approx(full.phase_energy("tail"), rel=1e-12)
+    # evicted windows integrate to nothing, but the total stays honest
+    assert ring.phase_energy("gone") == 0.0
+    assert full.phase_energy("gone") > 0.0
+    assert ring.energy_ws() == pytest.approx(full.energy_ws(), rel=1e-12)
+
+
 def test_synthesized_trace_integral_matches_phase_sum():
     tr = synthesize_phase_trace([("a", 2.0, 100.0), ("b", 1.0, 50.0),
                                  ("overlapped", 0.0, 10.0)],   # folded in

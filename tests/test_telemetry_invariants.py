@@ -1,0 +1,89 @@
+"""Property tests for telemetry invariants (needs the hypothesis dev dep).
+
+Three invariants the rest of the stack leans on:
+
+  * JSONL persistence is lossless: save/load round-trips preserve phase
+    markers, samples, metadata and the Ws integral;
+  * trapezoidal integration is exact on piecewise-linear power (closed
+    form of a ramp), at any sample density;
+  * ring-buffer eviction never corrupts totals or the phase attribution
+    of retained windows.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev dep
+from hypothesis import given, settings, strategies as st
+
+from repro.telemetry import PowerTrace, synthesize_phase_trace
+
+# phase specs: (name, seconds, dynamic joules) with strictly positive dt
+_PHASES = st.lists(
+    st.tuples(st.sampled_from(["prefill", "decode", "compute",
+                               "collective", "host"]),
+              st.floats(min_value=1e-3, max_value=50.0,
+                        allow_nan=False, allow_infinity=False),
+              st.floats(min_value=0.0, max_value=1e4,
+                        allow_nan=False, allow_infinity=False)),
+    min_size=1, max_size=6)
+
+
+@settings(max_examples=50, deadline=None)
+@given(phases=_PHASES, static=st.floats(min_value=0.0, max_value=500.0))
+def test_jsonl_roundtrip_preserves_markers_and_integral(tmp_path_factory,
+                                                        phases, static):
+    tr = synthesize_phase_trace(phases, static_watts=static,
+                                meta={"workload": "prop"})
+    p = tmp_path_factory.mktemp("traces") / "t.jsonl"
+    tr.to_jsonl(p)
+    tr2 = PowerTrace.from_jsonl(p)
+    assert tr2.spans == tr.spans
+    assert list(tr2.samples) == list(tr.samples)
+    assert tr2.meta == tr.meta
+    assert tr2.energy_ws() == pytest.approx(tr.energy_ws(), rel=1e-9,
+                                            abs=1e-9)
+    for name in tr.phase_names():
+        assert tr2.phase_energy(name) == \
+            pytest.approx(tr.phase_energy(name), rel=1e-9, abs=1e-9)
+
+
+@settings(max_examples=100, deadline=None)
+@given(a=st.floats(min_value=0.0, max_value=500.0),
+       b=st.floats(min_value=0.0, max_value=100.0),
+       T=st.floats(min_value=0.1, max_value=100.0),
+       n=st.integers(min_value=2, max_value=200))
+def test_trapezoid_matches_closed_form_ramp(a, b, T, n):
+    """w(t) = a + b*t integrates to a*T + b*T^2/2 exactly, any density."""
+    tr = PowerTrace()
+    for k in range(n):
+        t = T * k / (n - 1)
+        tr.add(t, a + b * t)
+    exact = a * T + 0.5 * b * T * T
+    assert tr.energy_ws() == pytest.approx(exact, rel=1e-9, abs=1e-9)
+
+
+@settings(max_examples=50, deadline=None)
+@given(watts=st.lists(st.floats(min_value=0.0, max_value=1e3,
+                                allow_nan=False, allow_infinity=False),
+                      min_size=12, max_size=60),
+       maxlen=st.integers(min_value=4, max_value=10))
+def test_ring_wraparound_keeps_totals_and_phase_attribution(watts, maxlen):
+    dt = 0.25
+    full = PowerTrace()
+    ring = PowerTrace(maxlen=maxlen)
+    for k, w in enumerate(watts):
+        full.add(k * dt, w)
+        ring.add(k * dt, w)
+    # a phase over the last maxlen samples stays fully inside the ring
+    t_hi = (len(watts) - 1) * dt
+    t_lo = (len(watts) - maxlen) * dt
+    full.mark_phase("tail", t_lo, t_hi)
+    ring.mark_phase("tail", t_lo, t_hi)
+    # totals are conserved through eviction ...
+    assert len(ring) == maxlen
+    assert ring.energy_ws() == pytest.approx(full.energy_ws(), rel=1e-9,
+                                             abs=1e-9)
+    assert ring.duration == pytest.approx(full.duration, rel=1e-9)
+    # ... and the retained window's phase energy is uncorrupted
+    assert ring.phase_energy("tail") == \
+        pytest.approx(full.phase_energy("tail"), rel=1e-9, abs=1e-9)
+    assert ring.phase_seconds("tail") == pytest.approx(t_hi - t_lo)
