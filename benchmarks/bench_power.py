@@ -1,6 +1,6 @@
 """Fig. 5 via the telemetry stack — Watt*seconds, CPU-only vs offloaded.
 
-Five workloads through one ``WsComparison`` pipeline:
+Six workloads through one ``WsComparison`` pipeline:
 
   * ``mriq_host``   — MRI-Q on this host: the CPU-only run is *sampled*
                       wall-clock at the paper's measured 121 W node point
@@ -20,16 +20,35 @@ Five workloads through one ``WsComparison`` pipeline:
                       (CPU-only node point vs accelerated node point, step
                       time ratio taken from the verifier's plan
                       measurements), reported with per-request
-                      prefill/decode Ws bill lines.
+                      prefill/decode Ws bill lines;
+  * ``compiled_rung``
+                    — the measurement-rung A/B: the SAME plan measured on
+                      the analytic rung (trace synthesized from the
+                      roofline estimate) vs on the compiled rung (trace
+                      sampled from the dry-run subprocess's wall-clock
+                      stages at measured utilization).  The Ws delta is
+                      the gap between what the estimate synthesizes and
+                      what the verification machine measures.  Runs the
+                      live subprocess when ``REPRO_BENCH_COMPILED=1``;
+                      otherwise replays the checked-in recording of that
+                      same trial (``benchmarks/data/``) through the
+                      replay rung.
+
+``run()`` also leaves the structured comparisons in ``LAST_REPORT`` so the
+harness's ``--json-out`` can persist the numbers as a machine-readable
+report (the CI workflow uploads it as an artifact).
 """
 from __future__ import annotations
 
+import os
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.backends import ReplayBackend
 from repro.core.power import R740_ARRIA10
 from repro.core.verifier import Verifier
 from repro.kernels import ref
@@ -41,6 +60,11 @@ from repro.telemetry import (ConstantSource, DecodeEnergyMeter,
                              render_comparison_text, synthesize_phase_trace)
 
 from benchmarks.bench_mriq import _data, offload_phase_times
+
+DATA_DIR = Path(__file__).resolve().parent / "data"
+
+#: structured output of the last run() (list of WsComparison.to_dict())
+LAST_REPORT: list = []
 
 
 def _mriq_host_comparison():
@@ -147,6 +171,27 @@ def _serving_comparison():
         workload="serve_tiny")
 
 
+def _compiled_rung_comparison():
+    """Synthesized vs measured: the same plan on two measurement rungs."""
+    cfg = get_config("tiny-test")
+    v = Verifier(cfg, "decode_32k", n_chips=256)
+    ma = v.measure_plan(cfg.plan, rung="analytic")
+    if os.environ.get("REPRO_BENCH_COMPILED"):
+        measured_rung = "compiled"      # live dry-run subprocess (~minutes)
+    else:
+        measured_rung = "replay"        # checked-in recording of that trial
+        v.backends["replay"] = ReplayBackend(
+            default=DATA_DIR / "tiny-test__decode_32k__compiled.trace.jsonl")
+    mm = v.measure_plan(cfg.plan, rung=measured_rung)
+    label = f"{measured_rung}_rung(measured)"
+    if not mm.ok:
+        label += f"[PENALTY:{mm.error[:40]}]"
+    return compare(
+        RunEnergy.from_measurement("analytic_rung(synthesized)", ma),
+        RunEnergy.from_measurement(label, mm),
+        workload="compiled_rung")
+
+
 def run() -> list[str]:
     lines: list[str] = []
     t0 = time.time()
@@ -157,7 +202,10 @@ def run() -> list[str]:
         _transformer_comparison("mamba2-1.3b", "decode_32k",
                                 "mamba2_decode"),
         _serving_comparison(),
+        _compiled_rung_comparison(),
     ]
+    LAST_REPORT.clear()
+    LAST_REPORT.extend(c.to_dict() for c in comparisons)
     for cmp_ in comparisons:
         lines.extend(render_comparison_csv(cmp_))
         lines.extend(render_comparison_text(cmp_))

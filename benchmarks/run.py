@@ -15,8 +15,10 @@
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+from pathlib import Path
 
 from benchmarks import (bench_destinations, bench_ga, bench_kernels,
                         bench_mriq, bench_narrowing, bench_power,
@@ -38,21 +40,41 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names")
+    ap.add_argument("--json-out", default=None,
+                    help="write a machine-readable report here: per-suite "
+                         "output lines plus any structured numbers a suite "
+                         "exposes via LAST_REPORT (bench_power's Ws "
+                         "comparisons — the CI artifact)")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only else list(SUITES))
 
+    doc: dict = {"suites": {}}
     failures = 0
     for name in names:
         mod = SUITES[name]
         print(f"\n# === {name} ({mod.__name__}) ===", flush=True)
         t0 = time.time()
+        entry: dict = {}
         try:
-            for line in mod.run():
+            lines = mod.run()
+            for line in lines:
                 print(line, flush=True)
+            entry["lines"] = lines
+            entry["seconds"] = round(time.time() - t0, 2)
+            report = getattr(mod, "LAST_REPORT", None)
+            if report:
+                entry["report"] = list(report)
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception as e:  # report and continue
             failures += 1
+            entry["error"] = f"{type(e).__name__}: {e}"
             print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
+        doc["suites"][name] = entry
+    if args.json_out:
+        out = Path(args.json_out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+        print(f"# json report -> {out}", flush=True)
     if failures:
         sys.exit(1)
 

@@ -6,9 +6,12 @@
 
 With ``--baseline`` the two JSONL traces are compared Fig.5-style (time
 ratio, Ws ratio, avg/peak W per phase); with only ``--trace`` a single-run
-summary is printed.  ``--ledger`` renders a persisted fleet EnergyLedger
-(the governed serving loop's ``--ledger-out``) as node / tenant / phase
-rollups — the fleet view and the per-tenant energy bill.  Imports only
+summary is printed.  Compiled-rung recordings (the traces
+``CompiledBackend`` persists next to its dry-run artifacts) additionally
+render the measured per-stage utilization and the rung that produced
+them.  ``--ledger`` renders a persisted fleet EnergyLedger (the governed
+serving loop's ``--ledger-out``) as node / tenant / phase rollups — the
+fleet view and the per-tenant energy bill.  Imports only
 ``repro.telemetry`` — no jax — so it can run on a machine that just holds
 the logs.
 """
@@ -75,7 +78,10 @@ def main() -> None:
         label = args.label or Path(args.trace).stem
         if args.baseline is None:
             if args.json:
-                json_doc["trace"] = trace.summary()
+                doc = trace.summary()
+                if trace.meta:      # rung/utilization of the recording
+                    doc["meta"] = trace.meta
+                json_doc["trace"] = doc
             else:
                 for line in render_trace_summary(trace, label):
                     print(line)

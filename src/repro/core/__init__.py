@@ -5,12 +5,19 @@ device) with evolutionary computation against measured time x power fitness,
 narrowing expensive-to-evaluate candidates (FPGA) with static analysis first.
 Here the decision space is the execution plan of a JAX program on a TPU pod
 (kernels, shardings, remat, collectives) and the "verification environment"
-is the compile-only dry-run + analytic time/energy models.
+is a ladder of measurement rungs (``repro.core.backends``): the analytic
+roofline estimate for the search inner loop, the compile-only dry-run with
+a wall-clock-sampled power trace for the narrowed finalists, and recorded
+replays for offline runs.
 """
 from repro.core.power import PowerModel, V5E  # noqa: F401
 from repro.core.fitness import fitness, TIMEOUT_SECONDS, TIMEOUT_PENALTY_S  # noqa: F401
 from repro.core.plan import PlanGenome, GENES  # noqa: F401
 from repro.core.ga import GAConfig, run_ga  # noqa: F401
-from repro.core.verifier import Verifier, Measurement  # noqa: F401
+from repro.core.backends import (AnalyticBackend, CompiledBackend,  # noqa: F401
+                                 MeasureContext, MeasurementBackend,
+                                 ReplayBackend, make_backend)
+from repro.core.verifier import (Verifier, Measurement,  # noqa: F401
+                                 RungPolicy, PRODUCTION_RUNGS)
 from repro.core.narrowing import narrow_candidates  # noqa: F401
 from repro.core.destinations import select_destination, Destination  # noqa: F401

@@ -35,7 +35,7 @@ from repro.core.intensity import site_census
 from repro.core.narrowing import narrow_candidates
 from repro.core.plan import PlanGenome
 from repro.core.power import V5E
-from repro.core.verifier import Measurement, Verifier
+from repro.core.verifier import Measurement, RungPolicy, Verifier
 from repro.telemetry.dvfs import envelope_for
 from repro.telemetry.energy import EnergyLedger
 
@@ -150,6 +150,11 @@ class Reconfigurator:
     set it False when the observed seconds live in a different unit
     domain than the verifier's (e.g. serving flush windows) — the search
     then selects purely on the power-aware fitness.
+
+    The re-search runs on the verifier's *search* rung; the governor that
+    parks the resulting plan as a pending migration may re-verify it on
+    the compiled rung before applying it (``rungs.governor``) — see
+    ``repro.telemetry.governor.PowerGovernor``.
     """
     cfg: ArchConfig
     shape_name: str
@@ -173,6 +178,14 @@ class Reconfigurator:
     def baseline(self) -> list:
         """Rolling per-step seconds (kept for pre-ledger callers)."""
         return [s for s, _ in self.ledger.steps]
+
+    def make_verifier(self) -> Verifier:
+        """The verification environment this monitor re-searches in (and
+        the governor re-verifies pending migrations with)."""
+        if self.verifier_factory is not None:
+            return self.verifier_factory()
+        return Verifier(self.cfg, self.shape_name, n_chips=256,
+                        mode="analytic")
 
     def for_node(self, node: str) -> "Reconfigurator":
         """A fresh monitor for another serving node: same arch/policy/search
@@ -199,9 +212,7 @@ class Reconfigurator:
         if step - self._last_reconfig < self.policy.cooldown_steps:
             return None
         self._last_reconfig = step
-        v = (self.verifier_factory() if self.verifier_factory
-             else Verifier(self.cfg, self.shape_name, n_chips=256,
-                           mode="analytic"))
+        v = self.make_verifier()
         shape = SHAPES[self.shape_name]
         req = Requirement(max_seconds=med_s) \
             if self.derive_requirement and med_s is not None else None
@@ -250,11 +261,21 @@ def adapt(cfg: ArchConfig, shape_name: str,
           ga: GAConfig = GAConfig(population=8, generations=4),
           slices: tuple[int, ...] = (64, 128, 256, 512),
           verify: bool = False,
+          rungs: Optional[RungPolicy] = None,
           log: Optional[Callable[[str], None]] = None) -> AdaptationReport:
-    """Run Steps 1-7 for (arch, shape); Step 6's full dry-run only when
-    ``verify=True`` (spawns the 512-device lowering)."""
+    """Run Steps 1-7 for (arch, shape).
+
+    ``rungs`` selects the measurement rung per consumer (see
+    ``repro.core.verifier.RungPolicy``): Step 3's GA searches on
+    ``rungs.search``, its narrowed finalists are promoted to
+    ``rungs.finalist``, and Step 6's operation-verification smoke runs on
+    ``rungs.smoke`` — the compiled rung, i.e. the real 512-device dry-run
+    lowering with a wall-clock-sampled power trace, entered only when
+    ``verify=True``.  The returned reconfigurator re-searches on the same
+    ladder."""
     rep = AdaptationReport()
     shape = SHAPES[shape_name]
+    rungs = rungs or RungPolicy()
 
     # 1: code analysis
     rep.census = [dataclasses.asdict(s) for s in site_census(cfg, shape)]
@@ -264,8 +285,9 @@ def adapt(cfg: ArchConfig, shape_name: str,
     rep.genes = PlanGenome.gene_names(cfg, shape.kind)
     if log:
         log(f"step 2: genes = {rep.genes}")
-    # 3: search (staged destinations incl. GA + narrowing)
-    v = Verifier(cfg, shape_name, n_chips=256, mode="analytic")
+    # 3: search (staged destinations incl. GA + narrowing), explicit rungs
+    v = Verifier(cfg, shape_name, n_chips=256, mode=rungs.search,
+                 rungs=rungs)
     rep.selection = select_destination(cfg, shape.kind, v, requirement, ga,
                                        log=log)
     rep.plan = rep.selection.chosen.genome.to_plan()
@@ -278,13 +300,30 @@ def adapt(cfg: ArchConfig, shape_name: str,
             f"{s.chips}ch->{s.cost:.4f}/step" for s in rep.slices))
     # 5: placement
     rep.placement = adjust_placement(rep.chips)
-    # 6: verification (optional heavy dry-run)
+    # 6: operation verification — the smoke trial on the compiled rung
+    # (one real lowering of the final (plan, slice, mesh), measured on the
+    # verification machine's wall clock).  A dedicated verifier carries the
+    # Step-4 slice and the Step-5 mesh into the trial: a 2-pod placement
+    # smokes on the 2-pod production mesh, exactly what will be deployed.
     if verify:
-        from repro.launch.dryrun import run_cell
-        rec = run_cell(cfg.name, shape_name,
-                       multi_pod=rep.placement["multi_pod"],
-                       plan=rep.plan, tag="_adapt")
-        rep.verified = {"status": rec["status"]}
-    # 7: hand back the runtime reconfigurator
-    rep.reconfigurator = Reconfigurator(cfg, shape_name)
+        from repro.core.backends import CompiledBackend
+        v6 = Verifier(cfg, shape_name, n_chips=rep.chips, mode=rungs.search,
+                      rungs=rungs,
+                      backends={"compiled": CompiledBackend(
+                          multi_pod=rep.placement["multi_pod"])})
+        m6 = v6.measure_plan(rep.plan, shape.kind, rung=rungs.smoke)
+        rep.verified = {"status": "OK" if m6.ok else "FAIL",
+                        "rung": rungs.smoke,
+                        "seconds": m6.seconds,
+                        "energy_ws": m6.energy_j,
+                        "utilization": m6.utilization,
+                        "error": m6.error}
+        if log:
+            log(f"step 6 [{rungs.smoke}]: "
+                f"{'OK' if m6.ok else 'FAIL ' + m6.error[:60]}")
+    # 7: hand back the runtime reconfigurator (same verification ladder)
+    rep.reconfigurator = Reconfigurator(
+        cfg, shape_name,
+        verifier_factory=lambda: Verifier(cfg, shape_name, n_chips=256,
+                                          mode=rungs.search, rungs=rungs))
     return rep

@@ -12,14 +12,22 @@ import math
 
 TIMEOUT_SECONDS = 180.0      # 3-minute verification timeout (paper §4.1)
 TIMEOUT_PENALTY_S = 1000.0   # penalized processing time (paper §4.1)
+PENALTY_WATTS = 1000.0       # penalized power for an unmeasured wattage
 
 
 def fitness(seconds: float, watts: float,
             alpha: float = 0.5, beta: float = 0.5) -> float:
-    """(Processing time)^-alpha * (Power consumption)^-beta."""
-    if seconds is None or watts is None:
+    """(Processing time)^-alpha * (Power consumption)^-beta.
+
+    A missing (``None``) component is penalized *independently*: a run
+    whose wattage was never measured books ``PENALTY_WATTS`` but keeps its
+    real processing time, and vice-versa — one unmeasured axis must not
+    clobber a valid measurement on the other.
+    """
+    if seconds is None:
         seconds = TIMEOUT_PENALTY_S
-        watts = 1.0
+    if watts is None:
+        watts = PENALTY_WATTS
     seconds = max(float(seconds), 1e-12)
     watts = max(float(watts), 1e-12)
     return seconds ** -alpha * watts ** -beta

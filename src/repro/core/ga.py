@@ -4,8 +4,11 @@ Elitist GA with tournament selection, uniform crossover and per-gene
 mutation.  The fitness is the paper's (time)^-1/2 * (power)^-1/2; setting
 beta=0 recovers the previous papers' time-only search (the ablation
 benchmarks compare the two).  Patterns are measured in the verification
-environment (Verifier); repeated patterns hit the cache, exactly as the
-paper re-measures only unseen genes.
+environment (Verifier) on its *search* rung — the cheap analytic backend,
+the inner-loop tier of the measurement-rung ladder; the narrowed winners
+are promoted to the compiled rung afterwards (see ``repro.core.
+destinations``).  Repeated patterns hit the cache, exactly as the paper
+re-measures only unseen genes.
 """
 from __future__ import annotations
 
@@ -63,14 +66,15 @@ def run_ga(cfg: ArchConfig, kind: str, verifier: Verifier,
     def fit(m: Measurement) -> float:
         return m.fitness(ga.alpha, ga.beta)
 
+    rung = verifier.rungs.search      # the GA inner loop's cheap tier
     history = []
     best: PlanGenome = pop[0]
-    best_m: Measurement = verifier.measure(best)
+    best_m: Measurement = verifier.measure(best, rung=rung)
 
     for gen in range(ga.generations):
         scored = []
         for g in pop:
-            m = verifier.measure(g)
+            m = verifier.measure(g, rung=rung)
             scored.append((fit(m), g, m))
         scored.sort(key=lambda x: -x[0])
         if scored[0][0] > fit(best_m):

@@ -1,69 +1,62 @@
-"""Verification environment — measure a plan's time & power.
+"""Verification environment — a thin cache over the measurement rungs.
 
 The paper measures each offload pattern on a real verification machine
-(3-minute timeout -> 1000 s penalty).  Two rungs here:
+(3-minute timeout -> 1000 s penalty), and re-measures only *new* patterns.
+``Verifier`` is exactly that: a per-(pattern, rung) cache in front of the
+backend layer (``repro.core.backends``), plus the *promotion rules* that
+say which consumer measures on which rung:
 
-* ``analytic``  — estimate_program + PowerModel, milliseconds per pattern.
-  Used by the GA inner loop and all tests.
-* ``compiled``  — spawn the dry-run in a subprocess (512 placeholder devices,
-  real GSPMD lowering of the actual plan), read back cost/collective/memory
-  analysis, convert to time/power with the same roofline model.  Expensive —
-  exactly the FPGA-compile asymmetry the paper's narrowing exists for.
+  * the GA inner loop burns thousands of trials -> ``rungs.search``
+    (analytic, milliseconds per pattern);
+  * the narrowed finalists of Step 3 earn a real trial -> ``rungs.
+    finalist`` (compiled in production: real GSPMD lowering, wall-clock
+    sampled);
+  * the Step-6 smoke and the governor's migration re-verification are
+    single expensive trials -> ``rungs.smoke`` / ``rungs.governor``.
 
-Every measured pattern is cached by genome key: the paper re-measures only
-new patterns.
+Passing ``rung=`` to ``measure``/``measure_plan`` overrides the default
+for one call; ``backends`` overrides a rung's backend instance (tests
+inject stubs or replay recordings there).  Everything expensive about a
+rung lives in its backend — the Verifier itself only caches, counts
+trials, and routes.
 """
 from __future__ import annotations
 
-import json
-import subprocess
-import sys
-import time
 from dataclasses import dataclass, field
-from pathlib import Path
 from typing import Optional
 
 from repro.configs.base import ArchConfig, PlanConfig, SHAPES
-from repro.core.fitness import TIMEOUT_PENALTY_S, TIMEOUT_SECONDS, fitness
-from repro.core.intensity import estimate_program
+from repro.core.backends import (ART_DRYRUN, MeasureContext,  # noqa: F401
+                                 Measurement, MeasurementBackend,
+                                 make_backend, penalty_measurement,
+                                 plan_tag)
+from repro.core.fitness import TIMEOUT_SECONDS
 from repro.core.plan import PlanGenome
 from repro.core.power import PowerModel, V5E
-from repro.telemetry.trace import PowerTrace
-from repro.telemetry.sampler import synthesize_phase_trace
 
-REPO_ROOT = Path(__file__).resolve().parents[3]
+REPO_ROOT = ART_DRYRUN.parents[1]
 
 
-@dataclass
-class Measurement:
-    seconds: float
-    watts: float
-    energy_j: float
-    flops: float = 0.0
-    hbm_bytes: float = 0.0
-    coll_bytes: float = 0.0
-    peak_mem_per_chip: float = 0.0
-    source: str = "analytic"
-    ok: bool = True
-    error: str = ""
-    # phase-marked power trace of the trial; the analytic rung synthesizes
-    # it from the roofline terms so integral(trace) == energy_j
-    trace: Optional[PowerTrace] = field(default=None, repr=False)
+@dataclass(frozen=True)
+class RungPolicy:
+    """Promotion rules: which rung each consumer role measures on.
 
-    def fitness(self, alpha: float = 0.5, beta: float = 0.5) -> float:
-        return fitness(self.seconds, self.watts, alpha, beta)
+    The defaults promote only the explicitly-heavy paths: searches stay
+    analytic (tests and the GA inner loop must stay milliseconds-cheap),
+    while Step 6's operation verification and the governor's migration
+    gate — both single, opt-in trials — use the compiled rung.  Production
+    flows that can afford lowering the finalists set
+    ``finalist="compiled"`` too.
+    """
+    search: str = "analytic"       # GA inner loop + stage-1/2 selection
+    finalist: str = "analytic"     # Step-3 narrowed finalists
+    smoke: str = "compiled"        # Step-6 operation verification
+    governor: str = "compiled"     # Step-7 migration re-verification
 
 
-def penalty_measurement(error: str, power: PowerModel) -> Measurement:
-    """Paper §4.1: timeout/failure -> processing time := 1000 s."""
-    trace = synthesize_phase_trace(
-        [("penalty", TIMEOUT_PENALTY_S, 0.0)],
-        static_watts=power.hw.p_static, samples_per_phase=4,
-        meta={"source": "penalty"})
-    return Measurement(seconds=TIMEOUT_PENALTY_S,
-                       watts=power.hw.p_static,
-                       energy_j=TIMEOUT_PENALTY_S * power.hw.p_static,
-                       ok=False, error=error, source="penalty", trace=trace)
+#: the full paper ladder: cheap estimates inside the search, real
+#: measurements for everything that survives the narrowing
+PRODUCTION_RUNGS = RungPolicy(finalist="compiled")
 
 
 @dataclass
@@ -72,147 +65,55 @@ class Verifier:
     shape_name: str
     n_chips: int = 256
     tp: int = 16
-    mode: str = "analytic"              # analytic | compiled
+    mode: str = "analytic"              # default rung for measure()
     power: PowerModel = field(default_factory=lambda: PowerModel(V5E))
     timeout_s: float = TIMEOUT_SECONDS
     overlap: float = 0.0                # collective/compute overlap fraction
     cache: dict = field(default_factory=dict)
     n_trials: int = 0                   # actual (non-cache) measurements
+    rungs: RungPolicy = field(default_factory=RungPolicy)
+    backends: dict = field(default_factory=dict)   # rung -> backend override
 
     @property
     def shape(self):
         return SHAPES[self.shape_name]
 
+    @property
+    def context(self) -> MeasureContext:
+        return MeasureContext(cfg=self.cfg, shape_name=self.shape_name,
+                              n_chips=self.n_chips, tp=self.tp,
+                              power=self.power, overlap=self.overlap,
+                              timeout_s=self.timeout_s)
+
     # ------------------------------------------------------------------
 
-    def measure(self, genome: PlanGenome) -> Measurement:
-        key = (genome.key(), self.mode)
+    def backend(self, rung: Optional[str] = None) -> MeasurementBackend:
+        """The backend measuring a rung (lazily built from the registry;
+        pre-seeded entries in ``backends`` — stubs, replays — win)."""
+        rung = rung or self.mode
+        if rung not in self.backends:
+            self.backends[rung] = make_backend(rung)
+        return self.backends[rung]
+
+    def _measure_cached(self, key: tuple, rung: str,
+                        plan: PlanConfig) -> Measurement:
         if key in self.cache:
             return self.cache[key]
         self.n_trials += 1
-        plan = genome.to_plan()
-        if self.mode == "compiled":
-            m = self._measure_compiled(plan)
-        else:
-            m = self._measure_analytic(plan)
+        m = self.backend(rung).measure(self.context, plan)
         self.cache[key] = m
         return m
 
-    def measure_plan(self, plan: PlanConfig, kind: Optional[str] = None
-                     ) -> Measurement:
-        g = PlanGenome.from_plan(self.cfg, kind or self.shape.kind, plan)
-        # from_plan snaps to the gene alphabet; measure the exact plan instead
-        if self.mode == "compiled":
-            return self._measure_compiled(plan)
-        return self._measure_analytic(plan)
+    def measure(self, genome: PlanGenome,
+                rung: Optional[str] = None) -> Measurement:
+        rung = rung or self.mode
+        return self._measure_cached((genome.key(), rung), rung,
+                                    genome.to_plan())
 
-    # ------------------------------------------------------------------
-
-    def _finish(self, flops, hbm, coll, peak_mem, source,
-                overlap=None, coll_ops: int = 0) -> Measurement:
-        if peak_mem > self.power.hw.hbm_bytes:
-            return penalty_measurement(
-                f"OOM: {peak_mem/2**30:.1f} GiB/chip > "
-                f"{self.power.hw.hbm_bytes/2**30:.0f} GiB", self.power)
-        overlap = self.overlap if overlap is None else overlap
-        t = self.power.step_time(flops, hbm, coll, self.n_chips, overlap)
-        if coll_ops:
-            import math as _m
-            # per-collective launch/hop latency grows with ring size
-            t += coll_ops * 5e-6 * max(_m.log2(max(self.n_chips, 2)), 1.0) \
-                * (1.0 - overlap)
-        w = self.power.watts(flops, hbm, coll * self.n_chips, t,
-                             self.n_chips) / self.n_chips
-        e = w * t * self.n_chips
-        return Measurement(seconds=t, watts=w, energy_j=e, flops=flops,
-                           hbm_bytes=hbm, coll_bytes=coll,
-                           peak_mem_per_chip=peak_mem, source=source,
-                           trace=self._synthesize_trace(flops, hbm, coll, t,
-                                                        source))
-
-    def _synthesize_trace(self, flops: float, hbm: float, coll: float,
-                          t: float, source: str) -> Optional[PowerTrace]:
-        """Phase-marked trace from the roofline decomposition: the
-        compute/memory-bound span followed by the exposed-collective span,
-        each drawing static + its dynamic joules.  By construction the
-        trapezoidal integral equals ``energy_j``."""
-        if t <= 0:
-            return None
-        hw = self.power.hw
-        t_cm = min(max(self.power.compute_term(flops, self.n_chips),
-                       self.power.memory_term(hbm, self.n_chips)), t)
-        dyn_cm = flops * hw.e_flop + hbm * hw.e_hbm
-        dyn_coll = coll * self.n_chips * hw.e_ici
-        return synthesize_phase_trace(
-            [("compute", t_cm, dyn_cm), ("collective", t - t_cm, dyn_coll)],
-            static_watts=hw.p_static * self.n_chips,
-            meta={"source": source, "arch": self.cfg.name,
-                  "shape": self.shape_name, "chips": self.n_chips})
-
-    def _measure_analytic(self, plan: PlanConfig) -> Measurement:
-        try:
-            est = estimate_program(self.cfg, self.shape, plan,
-                                   self.n_chips, self.tp)
-        except Exception as e:
-            return penalty_measurement(f"{type(e).__name__}: {e}", self.power)
-        return self._finish(est.flops, est.hbm_bytes, est.coll_bytes,
-                            est.peak_mem_per_chip, "analytic",
-                            overlap=0.5 if plan.overlap_collectives else None,
-                            coll_ops=est.coll_ops)
-
-    def _measure_compiled(self, plan: PlanConfig) -> Measurement:
-        """Spawn the dry-run (fresh process => 512 placeholder devices)."""
-        import dataclasses
-        import hashlib
-        plan_json = json.dumps(dataclasses.asdict(plan), sort_keys=True)
-        tag = "_p" + hashlib.sha1(plan_json.encode()).hexdigest()[:10]
-        cmd = [sys.executable, "-m", "repro.launch.dryrun",
-               "--arch", self.cfg.name, "--shape", self.shape_name,
-               "--plan-json", plan_json, "--tag", tag]
-        env = dict(PYTHONPATH=str(REPO_ROOT / "src"),
-                   PATH="/usr/bin:/bin", HOME="/root")
-        t0 = time.time()
-        try:
-            subprocess.run(cmd, timeout=self.timeout_s, capture_output=True,
-                           cwd=REPO_ROOT, env=env, check=False)
-        except subprocess.TimeoutExpired:
-            return penalty_measurement(
-                f"verification timeout after {self.timeout_s:.0f}s "
-                f"(paper's 3-minute rule)", self.power)
-        mesh_name = "pod16x16"
-        rec_path = (REPO_ROOT / "artifacts" / "dryrun" /
-                    f"{self.cfg.name}__{self.shape_name}__{mesh_name}{tag}.json")
-        if not rec_path.exists():
-            return penalty_measurement("dry-run produced no record",
-                                       self.power)
-        rec = json.loads(rec_path.read_text())
-        if rec.get("status") != "OK":
-            return penalty_measurement(rec.get("error", "dry-run failed"),
-                                       self.power)
-        # cost_analysis counts loop bodies once -> correct with known trip
-        # counts (layers scan x microbatch scan), then fall back to the
-        # analytic estimate for the portions HLO cannot attribute.
-        est = estimate_program(self.cfg, self.shape, plan,
-                               self.n_chips, self.tp)
-        coll = rec["collectives"]["total_bytes"] * self._trip_correction(plan)
-        m = self._finish(est.flops, est.hbm_bytes, coll,
-                         self._mem_estimate(rec), "compiled")
-        m.error = ""
-        return m
-
-    def _trip_correction(self, plan: PlanConfig) -> float:
-        from repro.models.transformer import unit_structure
-        _, n_full, tail = unit_structure(self.cfg)
-        trips = max(n_full, 1)
-        if self.shape.kind == "train":
-            trips *= max(plan.microbatches, 1)
-        return float(trips)
-
-    def _mem_estimate(self, rec: dict) -> float:
-        mem = rec.get("memory", {})
-        raw = mem.get("argument_size_in_bytes", 0) \
-            + mem.get("temp_size_in_bytes", 0)
-        # CPU-backend dry-runs upcast bf16 dots to f32 (DESIGN.md §8):
-        # halve the temp estimate toward the TPU target.
-        return mem.get("argument_size_in_bytes", 0) \
-            + mem.get("temp_size_in_bytes", 0) * 0.5 if raw else 0.0
+    def measure_plan(self, plan: PlanConfig, kind: Optional[str] = None,
+                     rung: Optional[str] = None) -> Measurement:
+        """Measure an exact plan (no snapping to the gene alphabet)."""
+        del kind                        # kept for callers' back-compat
+        rung = rung or self.mode
+        return self._measure_cached(("plan", plan_tag(plan), rung), rung,
+                                    plan)

@@ -6,40 +6,50 @@ train/prefill/decode step with the real shardings, compiles it, and records
 ``memory_analysis()`` (fits?), ``cost_analysis()`` (FLOPs/bytes) and the
 collective payload census parsed from the post-SPMD HLO (for §Roofline).
 
-Results are JSON-cached under artifacts/dryrun/ — reruns are incremental.
+This is also the *compiled measurement rung*'s child process
+(``repro.core.backends.CompiledBackend``): every cell additionally emits a
+stage sidecar — per-stage wall-clock timestamps plus the utilization its
+own process counters measured — which the parent samples into a real
+phase-marked power trace.
+
+Results are JSON-cached under artifacts/dryrun/ — reruns are incremental,
+and a malformed/stale cache file silently falls back to re-lowering.
+
+Importing this module has no side effects; the 512-device pin happens in
+``setup_host_devices()``, which ``main()`` calls before touching jax.
+(jax locks the host device count when its backend first initializes, so
+anything that imports this module from a live process — tests, benches —
+keeps its single real device.)
 
 Usage:
   python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
   python -m repro.launch.dryrun --all                  # single-pod sweep
   python -m repro.launch.dryrun --all --multi-pod      # 2-pod sweep
 """
-# The VERY FIRST lines — before ANY other import — jax locks the device
-# count on first init.  Dry-run only; tests/benches must see 1 device.
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from __future__ import annotations
 
 import argparse
 import json
-import re
+import os
 import time
 import traceback
+from contextlib import contextmanager
 from pathlib import Path
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.configs import SHAPES, get_config, list_archs
-from repro.launch.mesh import make_production_mesh
-from repro.models.model import Model
-from repro.parallel.param_sharding import (batch_shardings, cache_shardings,
-                                           opt_shardings, param_shardings)
-from repro.parallel.sharding import make_rules
-from repro.train.step import make_opt_init, make_train_step
+from typing import Optional
 
 ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
 
-from repro.core.transfer import census as collective_census  # noqa: E402
+HOST_DEVICE_COUNT = 512
+
+
+def setup_host_devices(n: int = HOST_DEVICE_COUNT) -> None:
+    """Pin the placeholder host device count for this process.
+
+    Must run before jax's backend initializes (``main()`` calls it first
+    thing; the CompiledBackend subprocess therefore gets 512 devices while
+    in-process importers keep their real device count)."""
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={n}"
 
 
 def model_flops(cfg, shape) -> float:
@@ -65,6 +75,14 @@ def _mem_dict(mem) -> dict:
     return out
 
 
+def _cost_dict(cost) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions (older
+    ones return a per-device list of dicts, newer a single dict)."""
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost if isinstance(cost, dict) else {}
+
+
 def _clamp_microbatches(plan, shape, mesh) -> int:
     """Microbatch size must stay divisible by the batch sharding ways."""
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
@@ -78,9 +96,69 @@ def _clamp_microbatches(plan, shape, mesh) -> int:
     return n
 
 
+# ---------------------------------------------------------------------------
+# Stage clock — the sidecar the compiled rung samples
+# ---------------------------------------------------------------------------
+
+class StageClock:
+    """Wall-clock stage windows + measured utilization for one trial.
+
+    Each ``stage(name)`` block records ``(t0, t1)`` on the trial's wall
+    clock and the utilization the process counters actually measured over
+    the window — CPU seconds per wall second, clamped to [0, 1].  That is
+    the verification machine's achieved utilization during lowering/
+    compilation, the signal the parent's power sampler drives the node
+    envelope with."""
+
+    def __init__(self) -> None:
+        self._base = time.perf_counter()
+        self.stages: list[dict] = []
+
+    @contextmanager
+    def stage(self, name: str):
+        t0, c0 = time.perf_counter(), time.process_time()
+        try:
+            yield
+        finally:
+            t1, c1 = time.perf_counter(), time.process_time()
+            wall = max(t1 - t0, 1e-9)
+            self.stages.append({
+                "name": name,
+                "t0": t0 - self._base,
+                "t1": t1 - self._base,
+                "util": min(max((c1 - c0) / wall, 0.0), 1.0),
+            })
+
+    def sidecar(self) -> dict:
+        return {"wall_s": time.perf_counter() - self._base,
+                "stages": self.stages}
+
+
+def load_cached(path: Path) -> Optional[dict]:
+    """Cached record, or None when missing/malformed/stale -> re-lower."""
+    from repro.core.backends import load_record
+    return load_record(path)
+
+
+# ---------------------------------------------------------------------------
+
+
 def build_step(arch: str, shape_name: str, mesh, plan=None):
     """Returns (fn, args_specs, in_shardings, donate) for the cell."""
     import dataclasses
+
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import SHAPES, get_config
+    from repro.models.model import Model
+    from repro.parallel.param_sharding import (batch_shardings,
+                                               cache_shardings,
+                                               opt_shardings,
+                                               param_shardings)
+    from repro.parallel.sharding import make_rules
+    from repro.train.step import make_opt_init, make_train_step
+
     cfg = get_config(arch)
     if plan is not None:
         cfg = dataclasses.replace(cfg, plan=plan)
@@ -122,11 +200,21 @@ def build_step(arch: str, shape_name: str, mesh, plan=None):
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              force: bool = False, plan=None, tag: str = "") -> dict:
+    import jax
+
+    from repro.configs import SHAPES, get_config
+    from repro.core.transfer import batching_report
+    from repro.core.transfer import census as collective_census
+    from repro.launch.mesh import make_production_mesh
+
     mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
     key = f"{arch}__{shape_name}__{mesh_name}{tag}"
     out_path = ART / f"{key}.json"
     if out_path.exists() and not force:
-        return json.loads(out_path.read_text())
+        cached = load_cached(out_path)
+        if cached is not None:
+            return cached
+        # malformed/stale artifact: fall through and re-lower
 
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -139,29 +227,32 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         out_path.write_text(json.dumps(rec, indent=1))
         return rec
 
+    clock = StageClock()
     t0 = time.time()
     try:
-        mesh = make_production_mesh(multi_pod=multi_pod)
-        fn, args, in_sh, out_sh, donate, cfg2, shape = build_step(
-            arch, shape_name, mesh, plan)
+        with clock.stage("build"):
+            mesh = make_production_mesh(multi_pod=multi_pod)
+            fn, args, in_sh, out_sh, donate, cfg2, shape = build_step(
+                arch, shape_name, mesh, plan)
         with mesh:
             jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                              donate_argnums=donate)
-            lowered = jitted.lower(*args)
-            t_lower = time.time() - t0
-            compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
-            mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis() or {}
-            hlo = compiled.as_text()
+            with clock.stage("lower"):
+                lowered = jitted.lower(*args)
+            with clock.stage("compile"):
+                compiled = lowered.compile()
+            with clock.stage("analyze"):
+                mem = compiled.memory_analysis()
+                cost = _cost_dict(compiled.cost_analysis())
+                hlo = compiled.as_text()
         census = collective_census(hlo)
-        from repro.core.transfer import batching_report
         brep = batching_report(hlo)
         n_chips = mesh.devices.size
+        stage_s = {s["name"]: s["t1"] - s["t0"] for s in clock.stages}
         rec.update(
             status="OK",
-            lower_s=round(t_lower, 2),
-            compile_s=round(t_compile, 2),
+            lower_s=round(stage_s.get("lower", 0.0), 2),
+            compile_s=round(stage_s.get("compile", 0.0), 2),
             n_chips=n_chips,
             hlo_flops=float(cost.get("flops", 0.0)),
             hlo_bytes=float(cost.get("bytes accessed", 0.0)),
@@ -179,10 +270,17 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                    seconds=round(time.time() - t0, 2))
     ART.mkdir(parents=True, exist_ok=True)
     out_path.write_text(json.dumps(rec, indent=1))
+    # stage sidecar: the compiled rung's wall-clock measurement input
+    (ART / f"{key}.stages.json").write_text(
+        json.dumps(clock.sidecar(), indent=1))
     return rec
 
 
 def main() -> None:
+    setup_host_devices()                # before jax's backend initializes
+
+    from repro.configs import SHAPES, list_archs
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

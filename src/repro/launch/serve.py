@@ -54,6 +54,10 @@ def main() -> None:
                     help="serve steps between checkpoint boundaries")
     ap.add_argument("--recon-shape", default="decode_32k",
                     help="shape the governor's re-search evaluates")
+    ap.add_argument("--verify-rung", default=None,
+                    choices=("compiled", "replay"),
+                    help="re-verify pending migrations on this measurement "
+                         "rung before applying them at a checkpoint")
     ap.add_argument("--ledger-out", default=None,
                     help="persist the fleet ledger (JSON) here")
     ap.add_argument("--trace-out", default=None,
@@ -74,7 +78,8 @@ def main() -> None:
         governor = PowerGovernor(
             recon, plan=cfg.plan,
             policy=GovernorPolicy(flush_every=args.flush_every,
-                                  checkpoint_every=args.checkpoint_every))
+                                  checkpoint_every=args.checkpoint_every),
+            verify_rung=args.verify_rung)
     loop = ServeLoop(model, params, batch_slots=args.slots,
                      max_seq=args.max_seq, meter=meter, governor=governor,
                      node=args.node)
@@ -109,9 +114,12 @@ def main() -> None:
         print(line)
     if governor is not None:
         for ev in governor.events:
+            verdict = "plan migration" if ev.applied else \
+                (f"REJECTED by {ev.verify_rung} rung "
+                 f"({ev.reject_reason[:60]})")
             print(f"reconfig @step {ev.step} (detected {ev.detected_step}, "
                   f"node {ev.node}): drift {ev.drift_ratio:.2f}x -> "
-                  f"plan migration")
+                  f"{verdict}")
         if not governor.events:
             print("governor: no energy drift; plan held")
     if args.ledger_out:

@@ -5,13 +5,23 @@ energy from roofline counters, this package *observes* it — fixed-interval
 watt sampling (the IPMI analogue), phase-marked traces with trapezoidal
 Ws integration, a per-phase ledger that the Step-7 monitor and the serving
 loop both write into, and the Fig. 5 CPU-only vs offloaded A/B harness.
+
+This package is also the substrate of the measurement *rungs*
+(``repro.core.backends``): the analytic rung synthesizes its trace from
+the roofline estimate (``synthesize_phase_trace``), the compiled rung
+samples the dry-run subprocess's wall-clock stages through the envelope at
+the measured utilization (``sample_stage_trace`` + ``PhaseUtilization``),
+and the replay rung re-reads persisted JSONL traces.  Every rung's
+``Measurement.energy_j`` equals its trace's ``integrate()``.
 """
 from repro.telemetry.trace import PhaseSpan, PowerTrace  # noqa: F401
-from repro.telemetry.dvfs import (PowerEnvelope, envelope_for,  # noqa: F401
-                                  node_envelope)
+from repro.telemetry.dvfs import (PhaseUtilization,  # noqa: F401
+                                  PowerEnvelope, UtilizationSpan,
+                                  envelope_for, node_envelope)
 from repro.telemetry.sampler import (ConstantSource,  # noqa: F401
                                      ModeledSource, PowerSampler,
                                      ReplaySource, TickClock,
+                                     sample_stage_trace,
                                      synthesize_phase_trace)
 from repro.telemetry.energy import (DEFAULT_NODE,  # noqa: F401
                                     DEFAULT_TENANT, DecodeEnergyMeter,

@@ -6,16 +6,28 @@ its active envelope, and a chip past the boost threshold briefly exceeds it
 (DVFS).  ``PowerEnvelope`` captures those three states so a sampler can turn
 a utilization signal into instantaneous watts.
 
+The utilization signal itself comes in two flavours:
+
+  * schedule-derived — a constant (or the serving loop's slots-occupied
+    fraction), the only option when nothing real was measured;
+  * measured — ``PhaseUtilization``, a piecewise-constant signal built from
+    the per-stage ``(name, t0, t1, util)`` records a compiled-rung trial
+    emits.  It is a plain callable of time, so it drops into
+    ``ModeledSource``/``DecodeEnergyMeter`` wherever a schedule-derived
+    constant used to sit.
+
 ``envelope_for`` derives the envelope from a ``HardwareSpec``'s energy
 constants: the active point is the idle floor plus the dynamic power of a
 roofline-balanced chip (compute at peak FLOP/s while streaming HBM at full
 bandwidth) — for the v5e constants that lands at ~162 W, matching the
-calibration note in ``repro.core.power``.
+calibration note in ``repro.core.power``.  ``PowerEnvelope.source`` turns
+an envelope plus any utilization signal (measured or schedule-derived)
+into a ``PowerSource`` for the sampler.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import TYPE_CHECKING
+from typing import TYPE_CHECKING, Callable, Union
 
 if TYPE_CHECKING:      # duck-typed at runtime: keeps telemetry import-light
     from repro.core.power import HardwareSpec, NodeSpec
@@ -70,6 +82,102 @@ class PowerEnvelope:
             w += (self.p_boost - self.p_active) \
                 * (util - self.boost_util) / (1.0 - self.boost_util)
         return w
+
+    def source(self, utilization: Union[float, Callable[[float], float]]
+               = 1.0, chips: int = 1) -> "ModeledSource":
+        """A ``PowerSource`` over this envelope.  ``utilization`` is either
+        the schedule-derived constant or a measured signal such as
+        ``PhaseUtilization``."""
+        return ModeledSource(self, utilization=utilization, chips=chips)
+
+
+@dataclass(frozen=True)
+class UtilizationSpan:
+    """One measured stage window: utilization is clamped into [0, 1] so a
+    mis-measured counter (or a >1 CPU ratio from multi-threaded lowering)
+    can never drive the envelope outside its operating points."""
+    name: str
+    t0: float
+    t1: float
+    util: float
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "util",
+                           min(max(float(self.util), 0.0), 1.0))
+
+    @property
+    def seconds(self) -> float:
+        return max(self.t1 - self.t0, 0.0)
+
+
+class PhaseUtilization:
+    """Measured per-phase utilization as a piecewise-constant signal.
+
+    Built from the stage records a compiled-rung dry-run emits
+    (``[{"name", "t0", "t1", "util"}, ...]`` or ``(name, t0, t1, util)``
+    tuples).  Calling it with a time returns the utilization of the stage
+    covering that instant (0.0 outside every stage — the machine is idle
+    between trials), so it slots in wherever a schedule-derived constant
+    used to: ``ModeledSource(env, utilization=PhaseUtilization(stages))``.
+    """
+
+    def __init__(self, stages):
+        spans = []
+        for s in stages:
+            if isinstance(s, dict):
+                spans.append(UtilizationSpan(s["name"], float(s["t0"]),
+                                             float(s["t1"]),
+                                             float(s.get("util", 0.0))))
+            else:
+                name, t0, t1, util = s
+                spans.append(UtilizationSpan(name, float(t0), float(t1),
+                                             float(util)))
+        self.spans = sorted(spans, key=lambda s: (s.t0, s.t1))
+        if not self.spans:
+            raise ValueError("PhaseUtilization needs at least one stage")
+
+    @property
+    def t0(self) -> float:
+        return self.spans[0].t0
+
+    @property
+    def t1(self) -> float:
+        return max(s.t1 for s in self.spans)
+
+    def __call__(self, t: float) -> float:
+        for s in self.spans:
+            if s.t0 <= t <= s.t1:
+                return s.util
+        return 0.0
+
+    def per_phase(self) -> dict:
+        """name -> measured utilization (seconds-weighted when a stage name
+        repeats)."""
+        acc: dict = {}
+        for s in self.spans:
+            u, dt = acc.get(s.name, (0.0, 0.0))
+            acc[s.name] = (u + s.util * max(s.seconds, 1e-12),
+                           dt + max(s.seconds, 1e-12))
+        return {n: u / dt for n, (u, dt) in acc.items()}
+
+
+@dataclass
+class ModeledSource:
+    """Envelope x utilization -> instantaneous watts (per node of `chips`).
+
+    ``utilization`` is either a schedule-derived constant in [0, 1] or a
+    callable of time — e.g. a ``PhaseUtilization`` built from measured
+    compiled-rung stage counters, or a phase schedule that returns compute
+    utilization during the compute phase and near-idle during transfers.
+    """
+    envelope: PowerEnvelope
+    utilization: Union[float, Callable[[float], float]] = 1.0
+    chips: int = 1
+
+    def watts(self, t: float) -> float:
+        u = self.utilization(t) if callable(self.utilization) \
+            else self.utilization
+        return self.envelope.watts(u) * self.chips
 
 
 def envelope_for(hw: HardwareSpec, boost_headroom: float = 0.12

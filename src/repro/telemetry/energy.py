@@ -33,7 +33,7 @@ import json
 import statistics
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.telemetry.dvfs import PowerEnvelope
 from repro.telemetry.trace import PowerTrace
@@ -252,14 +252,22 @@ class DecodeEnergyMeter:
     batch; pass ``tenants`` (one label per participating request) to book
     each request's share into its tenant cell.
 
-    ``source`` overrides the envelope: instantaneous watts come from
-    ``source.watts(t)`` on the meter's cumulative timeline.  A
-    ``ReplaySource`` here replays a recorded node trace through the serving
-    loop — including any drift tail the recording (or a test) carries.
+    ``utilization`` replaces the schedule-derived ``util`` argument with a
+    *measured* per-phase signal (e.g. a ``repro.telemetry.dvfs.
+    PhaseUtilization`` built from compiled-rung stage counters, or any
+    callable of the meter's cumulative timeline): when set, ``watts_at``
+    evaluates the envelope at what was measured, not at what the slot
+    schedule implies.  ``source`` overrides the envelope entirely:
+    instantaneous watts come from ``source.watts(t)`` on the meter's
+    cumulative timeline.  A ``ReplaySource`` there replays a recorded node
+    trace through the serving loop — including any drift tail the
+    recording (or a test) carries.
     """
     envelope: PowerEnvelope
     chips: int = 1
     source: Optional[object] = None     # PowerSource overriding the envelope
+    # measured utilization signal overriding the schedule-derived util
+    utilization: Optional[Callable[[float], float]] = None
     node: str = DEFAULT_NODE
     trace: PowerTrace = field(default_factory=PowerTrace)
     ledger: EnergyLedger = field(default_factory=EnergyLedger)
@@ -268,6 +276,8 @@ class DecodeEnergyMeter:
     def watts_at(self, t: float, util: float = 1.0) -> float:
         if self.source is not None:
             return self.source.watts(t) * self.chips
+        if self.utilization is not None:
+            util = min(max(float(self.utilization(t)), 0.0), 1.0)
         return self.envelope.watts(util) * self.chips
 
     def observe(self, seconds: float, util: float = 1.0,

@@ -19,6 +19,15 @@ drift could never trigger a re-search.  ``PowerGovernor`` closes it:
     ``checkpoint`` emits a ``GovernorEvent`` and updates ``plan`` — the
     caller restores weights + re-jits there, exactly the checkpointed plan
     migration the FT driver supports;
+  * before applying, a pending migration can be *re-verified on a higher
+    measurement rung* (``verify_rung``, normally ``"compiled"`` — the real
+    dry-run lowering with a wall-clock-sampled power trace): the pending
+    plan and the incumbent are both measured on that rung, and the
+    migration is applied only when the real trial confirms the analytic
+    estimate's preference (``repro.core.backends.confirms_preference``).
+    A rejected migration still emits a ``GovernorEvent`` — with
+    ``applied=False`` and the reason — so the fleet log shows what the
+    estimate promised and the measurement vetoed;
   * ``tick`` is the single hook a serving loop calls once per decode step;
     it applies both cadences (``flush_every``, ``checkpoint_every``).
 
@@ -52,8 +61,12 @@ class GovernorPolicy:
 
 @dataclass(frozen=True)
 class GovernorEvent:
-    """One applied plan migration (drift detected, swapped at checkpoint)."""
-    step: int                   # serve step of the checkpoint that applied it
+    """One plan-migration decision at a checkpoint boundary.
+
+    ``applied=True`` is a swap; ``applied=False`` records a migration the
+    higher measurement rung vetoed (``verify_rung`` + ``reject_reason``
+    say which rung and why)."""
+    step: int                   # serve step of the checkpoint that judged it
     detected_step: int          # serve step whose flush tripped the drift
     node: str
     drift_ratio: float
@@ -61,12 +74,17 @@ class GovernorEvent:
     median_ws: float
     old_plan: str
     new_plan: str
+    applied: bool = True
+    verify_rung: str = ""       # rung that re-verified ("" = not re-verified)
+    reject_reason: str = ""
 
     def to_dict(self) -> dict:
         return {"step": self.step, "detected_step": self.detected_step,
                 "node": self.node, "drift_ratio": self.drift_ratio,
                 "window_ws": self.window_ws, "median_ws": self.median_ws,
-                "old_plan": self.old_plan, "new_plan": self.new_plan}
+                "old_plan": self.old_plan, "new_plan": self.new_plan,
+                "applied": self.applied, "verify_rung": self.verify_rung,
+                "reject_reason": self.reject_reason}
 
 
 @dataclass
@@ -86,14 +104,21 @@ class PowerGovernor:
     its first node, and additional nodes get monitors cloned from it via
     ``Reconfigurator.for_node`` (same policy/search config, fresh rolling
     window).  ``ledger`` is the shared fleet ledger every flush rolls into.
+
+    ``verify_rung`` names the measurement rung that must confirm a pending
+    migration before the checkpoint applies it (``"compiled"`` for the
+    real dry-run trial, ``"replay"`` on machines holding recordings,
+    ``None`` to trust the analytic estimate as before).
     """
 
     def __init__(self, reconfigurator, plan=None,
                  policy: Optional[GovernorPolicy] = None,
-                 ledger: Optional[EnergyLedger] = None):
+                 ledger: Optional[EnergyLedger] = None,
+                 verify_rung: Optional[str] = None):
         self.policy = policy or GovernorPolicy()
         self.ledger = ledger if ledger is not None else EnergyLedger()
         self.plan = plan if plan is not None else reconfigurator.cfg.plan
+        self.verify_rung = verify_rung
         self.events: list[GovernorEvent] = []
         # serving flush windows are not verifier-comparable step seconds:
         # the re-search must select on fitness, not a median-derived
@@ -103,6 +128,7 @@ class PowerGovernor:
         self._monitors: dict = {}          # node -> Reconfigurator
         self._snapshots: dict = {}         # node -> {cell: (ws, s, count)}
         self._pending: dict = {}           # node -> _Pending
+        self._verifier = None              # re-verification cache holder
 
     # -- monitors ------------------------------------------------------------
 
@@ -168,20 +194,47 @@ class PowerGovernor:
             return None
         return next(reversed(list(self._pending.values())))
 
+    def _reverify(self, pending: _Pending) -> str:
+        """Re-measure the pending plan and the incumbent on the verify
+        rung; returns "" when the migration is confirmed, else the
+        rejection reason.  One verifier lives for the governor's lifetime,
+        so its per-(plan, rung) cache keeps an unchanged incumbent from
+        being re-lowered at every checkpoint that parks a migration."""
+        from repro.core.backends import confirms_preference
+        if self._verifier is None:
+            self._verifier = self.monitor(pending.node).make_verifier()
+        v = self._verifier
+        m_new = v.measure_plan(pending.plan, rung=self.verify_rung)
+        m_old = v.measure_plan(self.plan, rung=self.verify_rung)
+        if confirms_preference(m_new, m_old):
+            return ""
+        if not m_new.ok:
+            return (f"{self.verify_rung} rung penalized the new plan: "
+                    f"{m_new.error}")
+        return (f"{self.verify_rung} rung disagrees with the analytic "
+                f"estimate: new fitness {m_new.fitness():.4f} < incumbent "
+                f"{m_old.fitness():.4f}")
+
     def checkpoint(self, step: int):
-        """Apply every pending migration (one event per drifted node).
-        Returns the new plan when any was applied (the caller re-jits +
-        restores there), else None."""
+        """Judge every pending migration (one event per drifted node):
+        re-verify it on ``verify_rung`` when configured, then apply or
+        reject.  Returns the new plan when any was applied (the caller
+        re-jits + restores there), else None."""
         if not self._pending:
             return None
         parked, self._pending = self._pending, {}
         applied = None
         for p in parked.values():
+            reason = self._reverify(p) if self.verify_rung else ""
             self.events.append(GovernorEvent(
                 step=step, detected_step=p.detected_step, node=p.node,
                 drift_ratio=p.drift_ratio, window_ws=p.window_ws,
                 median_ws=p.median_ws,
-                old_plan=self.plan.describe(), new_plan=p.plan.describe()))
+                old_plan=self.plan.describe(), new_plan=p.plan.describe(),
+                applied=not reason, verify_rung=self.verify_rung or "",
+                reject_reason=reason))
+            if reason:
+                continue                # the real trial vetoed the estimate
             self.plan = p.plan
             applied = p.plan
         return applied

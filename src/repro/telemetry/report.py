@@ -83,10 +83,15 @@ def render_trace_summary(trace: PowerTrace, label: str = "trace"
     lines = [f"{label}: {s['samples']} samples over {s['seconds']:.3f}s — "
              f"{s['ws']:.1f}Ws avg={s['avg_w']:.1f}W "
              f"peak={s['peak_w']:.1f}W p95={s['p95_w']:.1f}W"]
+    # compiled-rung recordings carry the measured per-phase utilization
+    util = trace.meta.get("utilization", {})
     for name, st in sorted(s["phases"].items(), key=lambda kv: -kv[1]["ws"]):
+        extra = f"  util={util[name]:.2f}" if name in util else ""
         lines.append(f"  · {name:<24} {st['seconds']:>9.3f}s "
                      f"{st['ws']:>10.1f}Ws {st['avg_w']:>7.1f}W avg "
-                     f"{st['peak_w']:>7.1f}W peak")
+                     f"{st['peak_w']:>7.1f}W peak{extra}")
+    if trace.meta.get("source"):
+        lines.append(f"  measured on rung: {trace.meta['source']}")
     return lines
 
 

@@ -25,9 +25,10 @@ import time
 from bisect import bisect_right
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Callable, Optional, Protocol, Union
+from typing import Callable, Optional, Protocol
 
-from repro.telemetry.dvfs import PowerEnvelope
+from repro.telemetry.dvfs import (ModeledSource,  # noqa: F401  (re-export)
+                                  PhaseUtilization, PowerEnvelope)
 from repro.telemetry.trace import PowerTrace
 
 
@@ -41,24 +42,6 @@ class ConstantSource:
 
     def watts(self, t: float) -> float:
         return self.w
-
-
-@dataclass
-class ModeledSource:
-    """Envelope x utilization -> instantaneous watts (per node of `chips`).
-
-    ``utilization`` is either a constant in [0, 1] or a callable of time —
-    e.g. a phase schedule that returns compute utilization during the
-    compute phase and near-idle during host transfers.
-    """
-    envelope: PowerEnvelope
-    utilization: Union[float, Callable[[float], float]] = 1.0
-    chips: int = 1
-
-    def watts(self, t: float) -> float:
-        u = self.utilization(t) if callable(self.utilization) \
-            else self.utilization
-        return self.envelope.watts(u) * self.chips
 
 
 @dataclass
@@ -100,7 +83,8 @@ class PowerSampler:
         by a co-simulated workload marks windows on the same timeline.
         """
         now = t0
-        trace = trace or PowerTrace(maxlen=self.maxlen)
+        if trace is None:       # an empty caller trace is still a trace
+            trace = PowerTrace(maxlen=self.maxlen)
         trace.clock = lambda: now
         end = t0 + duration
         while now < end:
@@ -201,4 +185,43 @@ def synthesize_phase_trace(phases: list[tuple[str, float, float]],
         trace.add(t_end, w)                 # duplicate at boundary: dt=0
         now = t_end
     trace.mark_phase("step", t0, t0 + total, depth=0)
+    return trace
+
+
+# ---------------------------------------------------------------------------
+# Measured traces — the compiled rung has a wall clock: the dry-run
+# subprocess emits per-stage timestamps + measured utilization, and the
+# parent samples those through the envelope into a real trace.
+# ---------------------------------------------------------------------------
+
+def sample_stage_trace(stages, envelope: PowerEnvelope,
+                       chips: int = 1, interval: float = 0.05,
+                       maxlen: int = 65536,
+                       meta: Optional[dict] = None) -> PowerTrace:
+    """Phase-marked trace sampled over measured wall-clock stage windows.
+
+    ``stages`` is the compiled-rung sidecar: ``[{"name", "t0", "t1",
+    "util"}, ...]`` on the trial's wall clock.  A ``PowerSampler`` walks
+    each stage window at ``interval`` against the envelope driven by the
+    *measured* utilization (``PhaseUtilization``), with duplicate boundary
+    samples at every stage edge so the step change between stages
+    integrates exactly.  Unlike ``synthesize_phase_trace`` the watts here
+    are not back-solved from an energy estimate — they are the envelope
+    evaluated at what the trial actually measured.
+    """
+    util = PhaseUtilization(stages)
+    source = ModeledSource(envelope, utilization=util, chips=chips)
+    sampler = PowerSampler(source, interval=interval, maxlen=maxlen)
+    trace = PowerTrace(maxlen=maxlen, meta=meta)
+    t0 = util.t0
+    for span in util.spans:
+        if span.seconds <= 0:
+            continue
+        # one run() per stage: both edges get samples, so the inter-stage
+        # step is exact under trapezoidal integration
+        sampler.run(span.seconds, t0=span.t0, trace=trace)
+        trace.mark_phase(span.name, span.t0, span.t1, depth=1)
+    trace.mark_phase("trial", t0, util.t1, depth=0)
+    trace.meta.setdefault("utilization", util.per_phase())
+    trace.meta.setdefault("sampled", "wall_clock_stages")
     return trace

@@ -14,6 +14,12 @@ Samples evicted from the ring keep contributing to the *total* energy and
 duration (the integral of the dropped prefix is accumulated), so a bounded
 trace still reports the true Watt*seconds of an unbounded run; only
 per-window queries over the evicted past return nothing.
+
+Every measurement rung produces one of these: synthesized from the
+roofline estimate (analytic), sampled over the dry-run subprocess's wall
+clock (compiled), or re-read from a persisted recording (replay) — and a
+rung's ``Measurement.energy_j`` is by definition this trace's
+``integrate()``.
 """
 from __future__ import annotations
 
@@ -129,6 +135,13 @@ class PowerTrace:
                 e += 0.5 * (wlo + whi) * (hi - lo)
             ta, wa = tb, wb
         return e + (self.evicted_ws if full else 0.0)
+
+    def integrate(self, t0: Optional[float] = None,
+                  t1: Optional[float] = None) -> float:
+        """Alias of ``energy_ws`` — the measurement-rung vocabulary: a
+        rung's ``Measurement.energy_j`` is defined as the integral of its
+        trace, so backends and their invariant tests call this by name."""
+        return self.energy_ws(t0, t1)
 
     @property
     def duration(self) -> float:

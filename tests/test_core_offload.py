@@ -51,6 +51,25 @@ def test_paper_mriq_energy_ordering():
     assert fitness_time_only(2.0, 111.0) > fitness_time_only(14.0, 121.0)
 
 
+def test_fitness_penalizes_missing_components_independently():
+    """Regression: one missing axis must not clobber the valid value on
+    the other — fitness(2.0, None) has to keep the real 2 s, and
+    fitness(None, 111.0) the real 111 W."""
+    from repro.core.fitness import PENALTY_WATTS
+    assert fitness(2.0, None) == pytest.approx(
+        (2.0 ** -0.5) * (PENALTY_WATTS ** -0.5))
+    assert fitness(None, 111.0) == pytest.approx(
+        (TIMEOUT_PENALTY_S ** -0.5) * (111.0 ** -0.5))
+    assert fitness(None, None) == pytest.approx(
+        (TIMEOUT_PENALTY_S ** -0.5) * (PENALTY_WATTS ** -0.5))
+    # a measured-fast run with unmeasured power still beats a measured-slow
+    # one (the valid seconds survived) ...
+    assert fitness(2.0, None) > fitness(1000.0, None)
+    # ... and any penalized axis scores below the fully measured pair
+    assert fitness(2.0, None) < fitness(2.0, 111.0)
+    assert fitness(None, 111.0) < fitness(2.0, 111.0)
+
+
 # ---------------------------------------------------------------------------
 # power model
 # ---------------------------------------------------------------------------

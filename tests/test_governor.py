@@ -231,6 +231,83 @@ def test_governor_flush_is_incremental():
 
 
 # ---------------------------------------------------------------------------
+# Migration re-verification on a higher measurement rung
+# ---------------------------------------------------------------------------
+
+class _StubCompiledRung:
+    """Compiled-rung stand-in with a scripted verdict per plan."""
+
+    name = "compiled"
+
+    def __init__(self, veto_new: bool):
+        self.veto_new = veto_new
+        self.measured: list = []
+
+    def measure(self, ctx, plan):
+        from repro.core.backends import Measurement, penalty_measurement
+        self.measured.append(plan.describe())
+        if self.veto_new and len(self.measured) == 1:
+            # the pending plan is always re-verified first: fail its
+            # lowering, as a real compile/OOM/timeout would
+            return penalty_measurement("stub: lowering failed", ctx.power)
+        return Measurement(seconds=1.0, watts=100.0, energy_j=100.0,
+                           source="compiled")
+
+
+def _governed_with_stub(veto_new: bool):
+    from repro.core.verifier import Verifier
+    cfg = get_config("tiny-test")
+    stub = _StubCompiledRung(veto_new)
+
+    def make_verifier():
+        return Verifier(cfg, "decode_32k", n_chips=256,
+                        backends={"compiled": stub})
+
+    recon = _recon(cfg)
+    recon.verifier_factory = make_verifier
+    gov = PowerGovernor(recon, plan=cfg.plan,
+                        policy=GovernorPolicy(flush_every=1,
+                                              checkpoint_every=100),
+                        verify_rung="compiled")
+    meter = DecodeEnergyMeter(envelope=envelope_for(V5E), node="n0")
+    for step in range(1, 5):
+        meter.observe(0.01, util=1.0)
+        gov.flush(meter, step, node="n0")
+    meter.observe(0.05, util=1.0)         # 5x energy window -> drift
+    gov.flush(meter, 5, node="n0")
+    assert gov.pending is not None
+    return gov, stub
+
+
+def test_governor_rejects_migration_when_compiled_rung_disagrees():
+    """The analytic estimate promised a better plan; its compiled-rung
+    re-verification fails to lower -> the migration must NOT be applied,
+    and the rejection must be auditable."""
+    gov, stub = _governed_with_stub(veto_new=True)
+    old_plan = gov.plan
+    assert gov.checkpoint(100) is None        # vetoed, nothing applied
+    assert gov.plan is old_plan               # incumbent still serving
+    assert gov.pending is None                # the veto consumed the parking
+    assert len(stub.measured) == 2            # new plan + incumbent measured
+    assert len(gov.events) == 1
+    ev = gov.events[0]
+    assert ev.applied is False
+    assert ev.verify_rung == "compiled"
+    assert "penalized" in ev.reject_reason
+    assert ev.step == 100 and ev.node == "n0"
+
+
+def test_governor_applies_migration_when_compiled_rung_confirms():
+    gov, stub = _governed_with_stub(veto_new=False)
+    new = gov.checkpoint(100)
+    assert new is not None and gov.plan is new
+    assert len(stub.measured) == 2
+    ev = gov.events[0]
+    assert ev.applied is True
+    assert ev.verify_rung == "compiled" and ev.reject_reason == ""
+
+
+# ---------------------------------------------------------------------------
 # End-to-end: tiny ServeLoop + governor + injected drift (the acceptance
 # criterion)
 # ---------------------------------------------------------------------------

@@ -1,20 +1,26 @@
 """Property tests for telemetry invariants (needs the hypothesis dev dep).
 
-Three invariants the rest of the stack leans on:
+Five invariants the rest of the stack leans on:
 
   * JSONL persistence is lossless: save/load round-trips preserve phase
     markers, samples, metadata and the Ws integral;
   * trapezoidal integration is exact on piecewise-linear power (closed
     form of a ramp), at any sample density;
   * ring-buffer eviction never corrupts totals or the phase attribution
-    of retained windows.
+    of retained windows;
+  * measured per-phase utilization is clamped into [0, 1], whatever the
+    process counters reported;
+  * a compiled-rung measurement's ``energy_j`` equals its wall-clock-
+    sampled trace's ``integrate()`` — the rung invariant every Watt·second
+    comparison stands on.
 """
 import pytest
 
 pytest.importorskip("hypothesis")  # property tests need the dev dep
 from hypothesis import given, settings, strategies as st
 
-from repro.telemetry import PowerTrace, synthesize_phase_trace
+from repro.telemetry import (PhaseUtilization, PowerTrace,
+                             synthesize_phase_trace)
 
 # phase specs: (name, seconds, dynamic joules) with strictly positive dt
 _PHASES = st.lists(
@@ -87,3 +93,70 @@ def test_ring_wraparound_keeps_totals_and_phase_attribution(watts, maxlen):
     assert ring.phase_energy("tail") == \
         pytest.approx(full.phase_energy("tail"), rel=1e-9, abs=1e-9)
     assert ring.phase_seconds("tail") == pytest.approx(t_hi - t_lo)
+
+
+# ---------------------------------------------------------------------------
+# Measurement-rung invariants: measured utilization + compiled-rung energy
+# ---------------------------------------------------------------------------
+
+# sequential stage specs: (name, seconds, raw utilization) where the raw
+# utilization deliberately ranges OUTSIDE [0, 1] (a >1 CPU ratio from
+# multi-threaded lowering, a negative counter glitch)
+_STAGE_SPECS = st.lists(
+    st.tuples(st.sampled_from(["build", "lower", "compile", "analyze"]),
+              st.floats(min_value=1e-3, max_value=30.0,
+                        allow_nan=False, allow_infinity=False),
+              st.floats(min_value=-2.0, max_value=3.0,
+                        allow_nan=False, allow_infinity=False)),
+    min_size=1, max_size=5)
+
+
+def _sidecar_stages(specs):
+    t, out = 0.0, []
+    for name, dt, util in specs:
+        out.append({"name": name, "t0": t, "t1": t + dt, "util": util})
+        t += dt
+    return out
+
+
+@settings(max_examples=50, deadline=None)
+@given(specs=_STAGE_SPECS)
+def test_measured_utilization_stays_in_unit_interval(specs):
+    util = PhaseUtilization(_sidecar_stages(specs))
+    for span in util.spans:
+        assert 0.0 <= span.util <= 1.0
+    for u in util.per_phase().values():
+        assert 0.0 <= u <= 1.0
+    # the signal itself, sampled anywhere (inside stages, at boundaries,
+    # and in the idle outside), never leaves [0, 1]
+    t_probe = [util.t0 - 1.0, util.t0, (util.t0 + util.t1) / 2.0,
+               util.t1, util.t1 + 1.0]
+    t_probe += [s.t0 for s in util.spans] + [s.t1 for s in util.spans]
+    for t in t_probe:
+        assert 0.0 <= util(t) <= 1.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(specs=_STAGE_SPECS)
+def test_compiled_rung_energy_equals_trace_integral(specs):
+    """The rung invariant: the compiled rung's Measurement is defined BY
+    its measured trace — energy_j == trace.integrate(), seconds ==
+    trace.duration, watts == the measured average."""
+    from repro.configs import get_config
+    from repro.core.backends import CompiledBackend, MeasureContext
+    ctx = MeasureContext(cfg=get_config("tiny-test"),
+                         shape_name="decode_32k")
+    backend = CompiledBackend(record_trace=False)
+    rec = {"status": "OK", "collectives": {"total_bytes": 0.0},
+           "memory": {}}
+    m = backend.measurement_from_trial(ctx, rec, _sidecar_stages(specs))
+    assert m.ok and m.trace is not None
+    assert m.energy_j == pytest.approx(m.trace.integrate(), rel=1e-9,
+                                       abs=1e-9)
+    assert m.seconds == pytest.approx(m.trace.duration, rel=1e-9)
+    if m.seconds > 0:
+        assert m.watts == pytest.approx(m.energy_j / m.seconds, rel=1e-9)
+    for u in m.utilization.values():
+        assert 0.0 <= u <= 1.0
+    # the trace really is wall-clock stage-sampled, not synthesized
+    assert m.trace.meta.get("sampled") == "wall_clock_stages"
