@@ -19,7 +19,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.power import R740_ARRIA10, V5E
 from repro.kernels import ops, ref

@@ -32,7 +32,16 @@ Six workloads through one ``WsComparison`` pipeline:
                       live subprocess when ``REPRO_BENCH_COMPILED=1``;
                       otherwise replays the checked-in recording of that
                       same trial (``benchmarks/data/``) through the
-                      replay rung.
+                      replay rung;
+  * ``fleet_tiny``  — the fleet-plane A/B: the same paced, tenant-tagged
+                      request stream dispatched across a two-node fleet
+                      (one node running 3x hot) by the energy-blind
+                      round-robin baseline vs the energy-aware router
+                      (lowest predicted marginal Ws/token), with one
+                      tenant throttled by its Ws admission budget.  The
+                      report appends the merged fleet ledger's per-node /
+                      per-tenant rollup table and the admission summary
+                      (throttled submits book zero Ws).
 
 ``run()`` also leaves the structured comparisons in ``LAST_REPORT`` so the
 harness's ``--json-out`` can persist the numbers as a machine-readable
@@ -51,13 +60,16 @@ from repro.configs import get_config
 from repro.core.backends import ReplayBackend
 from repro.core.power import R740_ARRIA10
 from repro.core.verifier import Verifier
+from repro.fleet import (AdmissionController, FleetPolicy, FleetScheduler,
+                         Node)
 from repro.kernels import ref
 from repro.models.model import Model
 from repro.serve.engine import Request, ServeLoop
 from repro.telemetry import (ConstantSource, DecodeEnergyMeter,
-                             PowerSampler, RunEnergy, TickClock, compare,
-                             node_envelope, render_comparison_csv,
-                             render_comparison_text, synthesize_phase_trace)
+                             PowerSampler, RequestEnergy, RunEnergy,
+                             TickClock, WsBudget, compare, node_envelope,
+                             render_comparison_csv, render_comparison_text,
+                             render_rollups, synthesize_phase_trace)
 
 from benchmarks.bench_mriq import _data, offload_phase_times
 
@@ -192,6 +204,72 @@ def _compiled_rung_comparison():
         workload="compiled_rung")
 
 
+def _fleet_serve(router: str):
+    """One paced, tenant-tagged request stream through a 2-node fleet
+    (node ``cool`` at the accelerated point, node ``hot`` at 3x it) under
+    the given router, with tenant ``burst`` on a tight Ws budget."""
+    cfg = get_config("tiny-test")
+    node_spec = R740_ARRIA10
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tick = 0.004
+    cool = Node.build("cool", model, params, slots=2, max_seq=64, eos_id=-1,
+                      source=ConstantSource(node_spec.p_accel_active),
+                      clock=TickClock(tick), nominal_step_s=tick)
+    hot = Node.build("hot", model, params, slots=2, max_seq=64, eos_id=-1,
+                     source=ConstantSource(3.0 * node_spec.p_accel_active),
+                     clock=TickClock(tick), nominal_step_s=tick)
+    admission = AdmissionController(
+        {"burst": WsBudget(budget_ws=1.0, window_steps=0)})
+    sched = FleetScheduler(
+        [cool, hot],
+        policy=FleetPolicy(router=router, flush_every=4,
+                           migrate_on_drift=False),
+        admission=admission)
+    rng = np.random.default_rng(0)
+    arrivals = []
+    tenants = ["steady", "steady", "burst"]
+    for i in range(9):
+        prompt = rng.integers(2, cfg.vocab_size, size=5).astype(np.int32)
+        arrivals.append(Request(rid=i, prompt=prompt, max_new=8,
+                                tenant=tenants[i % len(tenants)]))
+    finished = sched.run(arrivals=arrivals, arrival_every=4)
+    return sched, finished
+
+
+def _fleet_run_energy(label: str, sched, finished) -> RunEnergy:
+    """Fleet-level RunEnergy: run totals from the merged ledger, phase
+    stats from its phase cut, bill lines from the served requests."""
+    roll = sched.ledger.rollup("phase")
+    run = RunEnergy(
+        label=label, seconds=sched.ledger.total_seconds,
+        ws=sched.ledger.total_ws,
+        peak_w=max((pe.peak_w for pe in roll.values()), default=0.0),
+        phases={name: pe.to_dict() for name, pe in roll.items()})
+    run.requests = [RequestEnergy.from_request(r) for r in finished]
+    return run
+
+
+def _fleet_comparison():
+    """Round-robin vs energy-aware routing over the same fleet + stream."""
+    sched_rr, fin_rr = _fleet_serve("round_robin")
+    sched_ea, fin_ea = _fleet_serve("energy")
+    cmp_ = compare(_fleet_run_energy("round_robin(fleet)", sched_rr, fin_rr),
+                   _fleet_run_energy("energy_router(fleet)", sched_ea,
+                                     fin_ea),
+                   workload="fleet_tiny")
+    extra = list(render_rollups(sched_ea.ledger,
+                                label="fleet_tiny[energy_router]"))
+    for tenant, row in sched_ea.admission.summary(sched_ea.ledger).items():
+        extra.append(f"admission {tenant}: spent {row['spent_ws']:.2f}Ws "
+                     f"of {row['budget_ws']:.2f}Ws budget, throttled "
+                     f"{row['rejected']} submits (0.00Ws booked)")
+    doc = cmp_.to_dict()
+    doc["fleet"] = {"round_robin": sched_rr.summary(),
+                    "energy": sched_ea.summary()}
+    return cmp_, extra, doc
+
+
 def run() -> list[str]:
     lines: list[str] = []
     t0 = time.time()
@@ -204,11 +282,16 @@ def run() -> list[str]:
         _serving_comparison(),
         _compiled_rung_comparison(),
     ]
+    fleet_cmp, fleet_extra, fleet_doc = _fleet_comparison()
+    comparisons.append(fleet_cmp)
     LAST_REPORT.clear()
-    LAST_REPORT.extend(c.to_dict() for c in comparisons)
+    LAST_REPORT.extend(c.to_dict() for c in comparisons[:-1])
+    LAST_REPORT.append(fleet_doc)
     for cmp_ in comparisons:
         lines.extend(render_comparison_csv(cmp_))
         lines.extend(render_comparison_text(cmp_))
+        if cmp_ is fleet_cmp:
+            lines.extend(fleet_extra)
         lines.append("")
     lines.append(f"# {len(comparisons)} Ws comparisons "
                  f"in {time.time()-t0:.1f}s")

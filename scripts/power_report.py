@@ -3,17 +3,20 @@
     PYTHONPATH=src python scripts/power_report.py --trace run.jsonl \
         [--baseline base.jsonl] [--json] [--label NAME] [--baseline-label N]
     PYTHONPATH=src python scripts/power_report.py --ledger fleet.json
+    PYTHONPATH=src python scripts/power_report.py \
+        --ledger node0.json --ledger node1.json   # merged fleet rollup
 
 With ``--baseline`` the two JSONL traces are compared Fig.5-style (time
 ratio, Ws ratio, avg/peak W per phase); with only ``--trace`` a single-run
 summary is printed.  Compiled-rung recordings (the traces
 ``CompiledBackend`` persists next to its dry-run artifacts) additionally
 render the measured per-stage utilization and the rung that produced
-them.  ``--ledger`` renders a persisted fleet EnergyLedger (the governed
+them.  ``--ledger`` renders a persisted EnergyLedger (the governed
 serving loop's ``--ledger-out``) as node / tenant / phase rollups — the
-fleet view and the per-tenant energy bill.  Imports only
-``repro.telemetry`` — no jax — so it can run on a machine that just holds
-the logs.
+fleet view and the per-tenant energy bill; repeat it to merge per-node
+ledgers into one fleet rollup (``EnergyLedger.merge`` conserves every
+cut).  Imports only ``repro.telemetry`` — no jax — so it can run on a
+machine that just holds the logs.
 """
 import argparse
 import json
@@ -34,9 +37,10 @@ def main() -> None:
                     help="JSONL power trace of the run under test")
     ap.add_argument("--baseline", default=None,
                     help="JSONL power trace of the baseline (CPU-only) run")
-    ap.add_argument("--ledger", default=None,
-                    help="JSON fleet ledger to render as "
-                         "node/tenant/phase rollups")
+    ap.add_argument("--ledger", action="append", default=None,
+                    help="JSON energy ledger to render as node/tenant/"
+                         "phase rollups; repeat to merge per-node ledgers "
+                         "into one fleet rollup")
     ap.add_argument("--label", default=None,
                     help="label for --trace (default: file stem)")
     ap.add_argument("--baseline-label", default=None,
@@ -51,7 +55,7 @@ def main() -> None:
         ap.error("need --trace and/or --ledger")
     if args.baseline is not None and args.trace is None:
         ap.error("--baseline requires --trace")
-    for p in (args.trace, args.baseline, args.ledger):
+    for p in [args.trace, args.baseline] + (args.ledger or []):
         if p is not None and not Path(p).is_file():
             ap.error(f"no such file: {p}")
 
@@ -59,18 +63,23 @@ def main() -> None:
     # section when only one was asked for — the original CLI contract)
     json_doc: dict = {}
 
-    if args.ledger is not None:
-        ledger = EnergyLedger.from_json(args.ledger)
+    if args.ledger:
+        # one ledger renders as-is; several merge into the fleet rollup
+        ledger = EnergyLedger()
+        for p in args.ledger:
+            ledger.merge(EnergyLedger.from_json(p))
+        label = Path(args.ledger[0]).stem if len(args.ledger) == 1 \
+            else f"fleet({len(args.ledger)} ledgers)"
         if args.json:
             rollups = {by: {k: pe.to_dict()
                             for k, pe in ledger.rollup(by).items()}
                        for by in ("node", "tenant", "phase")}
             json_doc["ledger"] = {"total_ws": ledger.total_ws,
                                   "total_seconds": ledger.total_seconds,
+                                  "sources": [str(p) for p in args.ledger],
                                   "rollups": rollups}
         else:
-            for line in render_rollups(ledger,
-                                       label=Path(args.ledger).stem):
+            for line in render_rollups(ledger, label=label):
                 print(line)
 
     if args.trace is not None:

@@ -18,7 +18,7 @@ archs only (qwen2-7b, mamba2-1.3b, granite-moe-1b, hubert-xlarge);
 """
 from __future__ import annotations
 
-from repro.configs.base import ArchConfig, PlanConfig, get_config
+from repro.configs.base import PlanConfig, get_config
 
 # archs whose bf16 weights (+states) fit a single v5e chip AND whose
 # train step tolerates losing the model axis.  MoE trains are excluded:

@@ -32,7 +32,6 @@ from repro.core.destinations import Requirement, SelectionLog, \
     select_destination
 from repro.core.ga import GAConfig
 from repro.core.intensity import site_census
-from repro.core.narrowing import narrow_candidates
 from repro.core.plan import PlanGenome
 from repro.core.power import V5E
 from repro.core.verifier import Measurement, RungPolicy, Verifier

@@ -238,7 +238,12 @@ def load_record(path: Path) -> Optional[dict]:
 
 
 def load_stage_sidecar(path: Path) -> Optional[list]:
-    """The per-stage timestamp/utilization sidecar, or None when unusable."""
+    """The per-stage timestamp/utilization sidecar, or None when unusable.
+
+    Values are validated, not just keys: a hand-edited sidecar with
+    non-numeric or non-monotonic windows must fall back to a penalty,
+    never crash the measurement spine downstream (the stage sampler and
+    ``PowerTrace.add`` both reject such input with exceptions)."""
     try:
         doc = json.loads(Path(path).read_text())
     except (OSError, ValueError):
@@ -246,9 +251,18 @@ def load_stage_sidecar(path: Path) -> Optional[list]:
     stages = doc.get("stages") if isinstance(doc, dict) else None
     if not isinstance(stages, list) or not stages:
         return None
+    t_prev = float("-inf")
     for s in stages:
         if not isinstance(s, dict) or not {"name", "t0", "t1"} <= set(s):
             return None
+        try:
+            t0, t1 = float(s["t0"]), float(s["t1"])
+            float(s.get("util", 0.0))
+        except (TypeError, ValueError):
+            return None
+        if not (t_prev <= t0 <= t1):    # windows must be ordered
+            return None
+        t_prev = t1
     return stages
 
 
@@ -342,7 +356,13 @@ class CompiledBackend:
         if stages is None:
             return penalty_measurement("dry-run produced no stage sidecar",
                                        ctx.power)
-        m = self.measurement_from_trial(ctx, rec, stages, plan=plan)
+        try:
+            m = self.measurement_from_trial(ctx, rec, stages, plan=plan)
+        except (TypeError, ValueError) as e:
+            # a sidecar that slipped past validation still may not crash
+            # the measurement spine — malformed artifacts penalize out
+            return penalty_measurement(f"malformed stage sidecar: {e}",
+                                       ctx.power)
         if m.ok and self.record_trace and m.trace is not None:
             try:
                 m.trace.to_jsonl(self.art_dir / f"{key}.trace.jsonl")

@@ -26,7 +26,6 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from repro.configs.base import ArchConfig
-from repro.core.fitness import fitness
 from repro.core.ga import GAConfig, run_ga
 from repro.core.narrowing import narrow_candidates
 from repro.core.plan import PlanGenome

@@ -8,7 +8,6 @@ issued, and processing time is set to 1,000 seconds").
 """
 from __future__ import annotations
 
-import math
 
 TIMEOUT_SECONDS = 180.0      # 3-minute verification timeout (paper §4.1)
 TIMEOUT_PENALTY_S = 1000.0   # penalized processing time (paper §4.1)

@@ -1,0 +1,24 @@
+"""repro.fleet — the control plane over per-node power governors.
+
+PR 2/3 closed the paper's Step-7 loop for a single node: a ``ServeLoop``
+meters Watt*seconds, a ``PowerGovernor`` re-plans the node when its ledger
+drifts.  This package is the layer above, for the fleet the ROADMAP's
+north star serves: a ``FleetScheduler`` owns N ``Node``s (each a
+ServeLoop + DecodeEnergyMeter + optional per-node governor bundle) and
+runs three policies on the merged fleet ``EnergyLedger``:
+
+  * energy-aware routing — each request goes to the node with the lowest
+    predicted marginal Ws/token (``Node.marginal_ws_per_token``);
+  * cross-node load migration — a drifted node's queue and active slots
+    drain to healthy nodes at a checkpoint boundary (``FleetEvent``);
+  * tenant admission control — ``AdmissionController`` throttles submits
+    against per-tenant ``WsBudget`` windows read off the fleet ledger.
+
+``repro.launch.serve --fleet N`` wires it on the CLI; the ``fleet_tiny``
+benchmark workload A/Bs the energy-aware router against round-robin.
+"""
+from repro.fleet.admission import (AdmissionController,  # noqa: F401
+                                   AdmissionRejection)
+from repro.fleet.node import Node  # noqa: F401
+from repro.fleet.scheduler import (FleetEvent, FleetPolicy,  # noqa: F401
+                                   FleetScheduler)

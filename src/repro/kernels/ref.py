@@ -1,7 +1,6 @@
 """Pure-jnp oracles for every Pallas kernel (the allclose references)."""
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

@@ -100,33 +100,57 @@ def _clamp_microbatches(plan, shape, mesh) -> int:
 # Stage clock — the sidecar the compiled rung samples
 # ---------------------------------------------------------------------------
 
+try:                     # host counters: optional, never a hard dependency
+    import psutil as _psutil
+    _PSUTIL_PROC = _psutil.Process()
+except Exception:        # pragma: no cover - psutil baked into the image
+    _psutil = None
+    _PSUTIL_PROC = None
+
+
 class StageClock:
     """Wall-clock stage windows + measured utilization for one trial.
 
     Each ``stage(name)`` block records ``(t0, t1)`` on the trial's wall
-    clock and the utilization the process counters actually measured over
-    the window — CPU seconds per wall second, clamped to [0, 1].  That is
-    the verification machine's achieved utilization during lowering/
-    compilation, the signal the parent's power sampler drives the node
-    envelope with."""
+    clock and the utilization the host's process counters actually
+    measured over the window — CPU seconds per wall second, clamped to
+    [0, 1].  When psutil is importable the counters come from the
+    process's ``cpu_times`` (user+system across every thread, the
+    RAPL-adjacent host signal the ROADMAP asks for) and the sidecar tags
+    the stage ``util_src="psutil"``; otherwise the stdlib
+    ``time.process_time`` ratio fallback keeps the rung working on
+    machines without it.  Either way this is the verification machine's
+    achieved utilization during lowering/compilation, the signal the
+    parent's power sampler drives the node envelope with."""
 
-    def __init__(self) -> None:
+    def __init__(self, proc=_PSUTIL_PROC) -> None:
         self._base = time.perf_counter()
+        self._proc = proc
         self.stages: list[dict] = []
+
+    def _cpu_seconds(self) -> tuple[float, str]:
+        if self._proc is not None:
+            try:
+                ct = self._proc.cpu_times()
+                return ct.user + ct.system, "psutil"
+            except Exception:       # process table hiccup: fall back
+                self._proc = None
+        return time.process_time(), "process_time"
 
     @contextmanager
     def stage(self, name: str):
-        t0, c0 = time.perf_counter(), time.process_time()
+        t0, (c0, _) = time.perf_counter(), self._cpu_seconds()
         try:
             yield
         finally:
-            t1, c1 = time.perf_counter(), time.process_time()
+            t1, (c1, src) = time.perf_counter(), self._cpu_seconds()
             wall = max(t1 - t0, 1e-9)
             self.stages.append({
                 "name": name,
                 "t0": t0 - self._base,
                 "t1": t1 - self._base,
                 "util": min(max((c1 - c0) / wall, 0.0), 1.0),
+                "util_src": src,
             })
 
     def sidecar(self) -> dict:
@@ -212,7 +236,11 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     out_path = ART / f"{key}.json"
     if out_path.exists() and not force:
         cached = load_cached(out_path)
-        if cached is not None:
+        # a record cached by a pre-sidecar run has no stage file: honour
+        # it only when the compiled rung's measurement input exists too,
+        # else re-lower so both artifacts are regenerated together
+        if cached is not None and (cached.get("status") != "OK"
+                                   or (ART / f"{key}.stages.json").exists()):
             return cached
         # malformed/stale artifact: fall through and re-lower
 

@@ -1,19 +1,26 @@
-"""Serving driver (CLI): batched continuous-batching greedy decode.
+"""Serving driver (CLI): a power-governed fleet of continuous-batching
+decode loops.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tiny-test --requests 6
 
-Power-governed serving (the paper's Step 7 under traffic):
+Fleet serving (the control plane over per-node Step-7 governors):
 
     PYTHONPATH=src python -m repro.launch.serve --arch tiny-test \
-        --requests 8 --tenants teamA,teamB --govern \
-        --ledger-out artifacts/serve/fleet.json \
-        --trace-out artifacts/serve/node0.jsonl
+        --fleet 2 --requests 12 --tenants teamA,teamB --govern \
+        --admission teamB=2.5 --admission-window 64 \
+        --ledger-out artifacts/serve/fleet.json
 
-Every run meters per-request prefill/decode Watt*seconds (DVFS-envelope
-DecodeEnergyMeter).  With ``--govern`` a PowerGovernor closes the loop:
-meter flushes roll into a fleet EnergyLedger (per-node / per-tenant
-rollups) and energy drift triggers a checkpointed plan migration.  The
-persisted ledger/trace re-render offline via ``scripts/power_report.py``.
+Every run builds ``--fleet N`` nodes (each a ServeLoop + DVFS-envelope
+DecodeEnergyMeter bundle, ``repro.fleet.Node``) under one
+``FleetScheduler``: requests route to the node with the lowest predicted
+marginal Ws/token (``--router round_robin`` for the energy-blind
+baseline), a drifted node's load drains to healthy nodes at a checkpoint
+boundary (``FleetEvent``), and ``--admission tenant=Ws[,t=Ws]`` throttles
+submits against per-tenant budget windows on the merged fleet ledger.
+With ``--govern`` each node additionally gets its own PowerGovernor, so
+plan migrations keep working underneath the fleet plane.  The persisted
+ledger re-renders offline via ``scripts/power_report.py --ledger`` (pass
+it repeatedly to merge fleets).
 """
 from __future__ import annotations
 
@@ -26,11 +33,40 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.adapt import ReconfigPolicy, Reconfigurator
 from repro.core.ga import GAConfig
-from repro.core.power import V5E
+from repro.fleet import (AdmissionController, FleetPolicy, FleetScheduler,
+                         Node)
 from repro.models.model import Model
-from repro.serve.engine import Request, ServeLoop
-from repro.telemetry import (DecodeEnergyMeter, GovernorPolicy,
-                             PowerGovernor, envelope_for, render_rollups)
+from repro.serve.engine import Request
+from repro.telemetry import (GovernorPolicy, PowerGovernor, WsBudget,
+                             render_rollups)
+
+
+def parse_budgets(spec: str, window_steps: int) -> dict:
+    """``teamA=2.5,teamB=0.8`` -> {tenant: WsBudget} (Ws per window)."""
+    budgets = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        tenant, _, ws = part.partition("=")
+        if not tenant or not ws:
+            raise ValueError(f"bad --admission entry {part!r} "
+                             f"(want tenant=Ws)")
+        budgets[tenant.strip()] = WsBudget(budget_ws=float(ws),
+                                           window_steps=window_steps)
+    return budgets
+
+
+def build_governor(cfg, args, node: str) -> PowerGovernor:
+    recon = Reconfigurator(cfg, args.recon_shape,
+                           policy=ReconfigPolicy(),
+                           ga=GAConfig(population=6, generations=2),
+                           node=node)
+    return PowerGovernor(
+        recon, plan=cfg.plan,
+        policy=GovernorPolicy(flush_every=args.flush_every,
+                              checkpoint_every=args.checkpoint_every),
+        verify_rung=args.verify_rung)
 
 
 def main() -> None:
@@ -41,13 +77,30 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--node", default="node0",
-                    help="node label for ledger rollups")
+    ap.add_argument("--fleet", type=int, default=1,
+                    help="number of serving nodes under the scheduler")
+    ap.add_argument("--node", default="node",
+                    help="node label prefix (node0..nodeN-1)")
+    ap.add_argument("--router", default="energy",
+                    choices=("energy", "round_robin"),
+                    help="dispatch policy: lowest marginal Ws/token, or "
+                         "the energy-blind round-robin baseline")
     ap.add_argument("--tenants", default="default",
                     help="comma-separated tenant labels, cycled across "
                          "requests (per-tenant energy billing)")
+    ap.add_argument("--admission", default=None,
+                    help="per-tenant Ws budgets, e.g. teamA=2.5,teamB=0.8; "
+                         "exhausted tenants are throttled (zero Ws booked)")
+    ap.add_argument("--admission-window", type=int, default=0,
+                    help="budget window in fleet steps (0 = whole run)")
+    ap.add_argument("--arrival-every", type=int, default=0,
+                    help="pace arrivals: submit one request every N fleet "
+                         "steps (0 = all upfront); paced arrivals are what "
+                         "make admission throttling observable")
+    ap.add_argument("--no-drain", action="store_true",
+                    help="disable cross-node load migration on drift")
     ap.add_argument("--govern", action="store_true",
-                    help="attach a PowerGovernor (Step-7 serving loop)")
+                    help="attach a per-node PowerGovernor (Step-7 loop)")
     ap.add_argument("--flush-every", type=int, default=8,
                     help="serve steps between meter flushes")
     ap.add_argument("--checkpoint-every", type=int, default=16,
@@ -56,76 +109,103 @@ def main() -> None:
                     help="shape the governor's re-search evaluates")
     ap.add_argument("--verify-rung", default=None,
                     choices=("compiled", "replay"),
-                    help="re-verify pending migrations on this measurement "
-                         "rung before applying them at a checkpoint")
+                    help="re-verify pending plan migrations on this "
+                         "measurement rung before applying them")
     ap.add_argument("--ledger-out", default=None,
                     help="persist the fleet ledger (JSON) here")
     ap.add_argument("--trace-out", default=None,
-                    help="persist the node's power trace (JSONL) here")
+                    help="persist node0's power trace (JSONL) here")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    meter = DecodeEnergyMeter(envelope=envelope_for(V5E))
-    governor = None
-    if args.govern:
-        recon = Reconfigurator(cfg, args.recon_shape,
-                               policy=ReconfigPolicy(),
-                               ga=GAConfig(population=6, generations=2),
-                               node=args.node)
-        governor = PowerGovernor(
-            recon, plan=cfg.plan,
-            policy=GovernorPolicy(flush_every=args.flush_every,
-                                  checkpoint_every=args.checkpoint_every),
-            verify_rung=args.verify_rung)
-    loop = ServeLoop(model, params, batch_slots=args.slots,
-                     max_seq=args.max_seq, meter=meter, governor=governor,
-                     node=args.node)
+    nodes = []
+    for i in range(max(args.fleet, 1)):
+        name = f"{args.node}{i}"
+        governor = build_governor(cfg, args, name) if args.govern else None
+        nodes.append(Node.build(name, model, params, slots=args.slots,
+                                max_seq=args.max_seq, governor=governor))
+    admission = None
+    if args.admission:
+        admission = AdmissionController(
+            parse_budgets(args.admission, args.admission_window))
+    sched = FleetScheduler(
+        nodes,
+        policy=FleetPolicy(flush_every=args.flush_every,
+                           checkpoint_every=args.checkpoint_every,
+                           router=args.router,
+                           migrate_on_drift=not args.no_drain),
+        admission=admission)
 
     tenants = [t.strip() for t in args.tenants.split(",") if t.strip()] \
         or ["default"]
     rng = np.random.default_rng(0)
-    reqs = []
+    arrivals = []
     for i in range(args.requests):
         plen = int(rng.integers(4, 12))
         prompt = rng.integers(2, cfg.vocab_size, size=plen).astype(np.int32)
-        req = Request(rid=i, prompt=prompt, max_new=args.max_new,
-                      tenant=tenants[i % len(tenants)])
-        reqs.append(req)
-        loop.submit(req)
+        arrivals.append(Request(rid=i, prompt=prompt, max_new=args.max_new,
+                                tenant=tenants[i % len(tenants)]))
 
     t0 = time.time()
-    finished = loop.run()
+    if args.arrival_every > 0:
+        finished = sched.run(arrivals=arrivals,
+                             arrival_every=args.arrival_every)
+    else:
+        for req in arrivals:
+            sched.submit(req)
+        finished = sched.run()
     wall = time.time() - t0
-    n_tok = sum(len(r.out) for r in reqs)
+    if admission is not None:
+        for rej in admission.rejections:
+            print(f"req {rej.rid}: tenant={rej.tenant} THROTTLED @step "
+                  f"{rej.step} ({rej.reason})")
+    n_tok = sum(len(r.out) for r in finished)
     for r in finished:
         print(f"req {r.rid}: tenant={r.tenant} "
               f"prompt={r.prompt.tolist()[:6]}... "
               f"out={r.out[:10]} ({len(r.out)} tokens) "
               f"{r.prefill_ws:.3f}Ws prefill + {r.decode_ws:.3f}Ws decode")
+    steps = sum(n.loop.steps_done for n in nodes)
     print(f"\nserved {len(finished)} requests, {n_tok} tokens in {wall:.2f}s "
-          f"({n_tok/max(wall,1e-9):.1f} tok/s, {loop.steps_done} decode "
-          f"steps)")
+          f"({n_tok/max(wall,1e-9):.1f} tok/s, {steps} decode steps on "
+          f"{len(nodes)} nodes, router={args.router})")
 
-    ledger = governor.ledger if governor is not None else meter.ledger
-    for line in render_rollups(ledger, label=f"energy[{args.node}]"):
+    for line in render_rollups(sched.ledger, label="fleet"):
         print(line)
-    if governor is not None:
-        for ev in governor.events:
+    for node in nodes:
+        d = node.to_dict()
+        util = node.loop.utilization.per_phase() \
+            if node.loop.utilization is not None else {}
+        util_s = " ".join(f"{k}={v:.2f}" for k, v in sorted(util.items()))
+        print(f"node {d['name']}: served={d['served']} "
+              f"{d['total_ws']:.2f}Ws parked={d['parked']} "
+              f"measured_util[{util_s}]")
+    for ev in sched.events:
+        print(f"fleet drain @step {ev.step} (detected {ev.detected_step}): "
+              f"{ev.node} drift {ev.drift_ratio:.2f}x -> "
+              f"{len(ev.moved_rids)} requests to {','.join(ev.targets)}")
+    if admission is not None:
+        for tenant, row in admission.summary(sched.ledger).items():
+            print(f"admission {tenant}: spent {row['spent_ws']:.2f}Ws of "
+                  f"{row['budget_ws']:.2f}Ws, rejected {row['rejected']} "
+                  f"submits (0.00Ws booked)")
+    for node in nodes:
+        if node.governor is None:
+            continue
+        for ev in node.governor.events:
             verdict = "plan migration" if ev.applied else \
                 (f"REJECTED by {ev.verify_rung} rung "
                  f"({ev.reject_reason[:60]})")
             print(f"reconfig @step {ev.step} (detected {ev.detected_step}, "
                   f"node {ev.node}): drift {ev.drift_ratio:.2f}x -> "
                   f"{verdict}")
-        if not governor.events:
-            print("governor: no energy drift; plan held")
     if args.ledger_out:
-        print(f"ledger -> {ledger.to_json(args.ledger_out)}")
+        print(f"ledger -> {sched.ledger.to_json(args.ledger_out)}")
     if args.trace_out:
-        print(f"trace  -> {meter.trace.to_jsonl(args.trace_out)}")
+        print(f"trace  -> {nodes[0].meter.trace.to_jsonl(args.trace_out)}")
 
 
 if __name__ == "__main__":

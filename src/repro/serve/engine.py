@@ -10,7 +10,18 @@ Watt*seconds: every prefill/decode step's wall time + slot utilization is
 booked into the meter's trace and ledger, and the step's energy is split
 across the requests that shared the batch (``Request.energy_ws``).
 Requests carry a ``tenant`` label, so the meter's ledger cells double as
-per-tenant energy billing.
+per-tenant energy billing.  Utilization is *measured*, not scheduled: the
+loop counts the slots each window actually occupied and records the
+fraction as a ``LiveUtilization`` span on the meter's timeline — the
+meter's envelope reads that signal (``meter.utilization``), and
+``loop.utilization.per_phase()`` is the run's measured occupancy profile.
+
+The loop is also a fleet citizen (``repro.fleet``): ``park()`` stops it
+taking new work, and ``drain()`` evicts its queue *and* its active slots
+as resumable requests — an evicted request keeps its generated tokens, and
+whichever loop it is resubmitted to teacher-forces prompt+output back
+through its own cache before decoding the remainder (the cross-node load
+migration the ``FleetScheduler`` applies at checkpoint boundaries).
 
 Pass a ``repro.telemetry.governor.PowerGovernor`` too and the loop closes
 the paper's Step-7 circuit under serving traffic: every
@@ -31,6 +42,7 @@ import numpy as np
 
 from repro.models.model import Model
 from repro.parallel.sharding import ShardingRules
+from repro.telemetry.dvfs import LiveUtilization
 from repro.telemetry.energy import DecodeEnergyMeter
 
 
@@ -89,6 +101,14 @@ class ServeLoop:
         self.finished: list[Request] = []
         self.plan_migrations: list = []     # (step, new_plan) from governor
         self.steps_done = 0
+        self.parked = False                 # a parked loop takes no new work
+        # measured slot-occupancy signal: unless the meter already carries
+        # a measured utilization, the loop feeds it one — real occupancy
+        # counters per step window, not the schedule-derived fraction
+        self.utilization: Optional[LiveUtilization] = None
+        if meter is not None and meter.utilization is None:
+            self.utilization = LiveUtilization()
+            meter.utilization = self.utilization
         self.cache = model.init_cache(batch_slots, max_seq)
         self.pos = np.zeros(batch_slots, np.int32)
         self._decode = jax.jit(make_decode_step(model))
@@ -97,25 +117,86 @@ class ServeLoop:
     def submit(self, req: Request):
         self.queue.append(req)
 
+    @property
+    def occupied_slots(self) -> int:
+        """Real occupancy counter: slots currently holding a request."""
+        return sum(1 for r in self.active if r is not None)
+
+    @property
+    def has_work(self) -> bool:
+        return self.occupied_slots > 0 or bool(self.queue
+                                               and not self.parked)
+
+    def park(self) -> None:
+        """Stop taking new work (queued or resubmitted); in-flight slots
+        still decode to completion.  A parked loop is what a fleet
+        scheduler drains — and what its router skips.
+
+        Parking does not serve or discard queued requests: they stay in
+        ``queue`` (and ``run()`` returns without touching them) until the
+        loop is unparked or ``drain()`` hands them to another loop — a
+        caller that parks without doing either is choosing to hold that
+        traffic."""
+        self.parked = True
+
+    def unpark(self) -> None:
+        self.parked = False
+
+    def drain(self, include_queue: bool = True) -> list[Request]:
+        """Evict the queue and every active slot as resumable requests.
+
+        Evicted requests keep their generated tokens; resubmitting one to
+        another loop teacher-forces prompt+output through that loop's
+        cache (see ``_fill_slots``) and decoding continues where it
+        stopped.  This is the load half of a checkpointed migration: the
+        fleet scheduler calls it at a checkpoint boundary, exactly like
+        plan migrations apply."""
+        moved: list[Request] = []
+        if include_queue:
+            moved.extend(self.queue)
+            self.queue.clear()
+        for i, req in enumerate(self.active):
+            if req is not None:
+                self.active[i] = None
+                moved.append(req)
+        return moved
+
+    def _record_util(self, phase: str, seconds: float, util: float) -> None:
+        """Book the window's measured occupancy on the meter timeline
+        (just before the meter integrates it)."""
+        if self.utilization is not None and seconds > 0:
+            t0 = self.meter.now
+            self.utilization.record(phase, t0, t0 + seconds, util)
+
     def _fill_slots(self):
+        if self.parked:
+            return
         for i in range(self.slots):
             if self.active[i] is None and self.queue:
                 req = self.queue.pop(0)
                 self.active[i] = req
                 # teacher-forced sequential prefill through the decode path
                 # (single-slot prompts stay short in the examples; production
-                # prefill uses make_prefill on a full batch)
+                # prefill uses make_prefill on a full batch).  A migrated
+                # request resumes here: its already-generated tokens are
+                # teacher-forced along with the prompt, so decode continues
+                # from where the drained node stopped.
+                seq = np.asarray(req.prompt, np.int32) if not req.out else \
+                    np.concatenate([np.asarray(req.prompt, np.int32),
+                                    np.asarray(req.out, np.int32)])
                 t0 = self.clock()
-                for t, tok in enumerate(req.prompt[:-1]):
+                for t, tok in enumerate(seq[:-1]):
                     self._step_one(i, int(tok), t)
                 if self.meter is not None:
-                    ws = self.meter.observe(
-                        self.clock() - t0, util=1.0 / self.slots,
-                        phase="prefill", tenants=[req.tenant])
+                    dt = self.clock() - t0
+                    util = 1.0 / self.slots
+                    self._record_util("prefill", dt, util)
+                    ws = self.meter.observe(dt, util=util, phase="prefill",
+                                            tenants=[req.tenant])
                     req.energy_ws += ws
                     req.prefill_ws += ws
-                self.pos[i] = len(req.prompt) - 1
-                self._tokens[i, 0] = int(req.prompt[-1])
+                self.pos[i] = len(seq) - 1
+                self._tokens[i, 0] = int(seq[-1])
 
     def _step_one(self, slot: int, token: int, pos: int):
         toks = self._tokens.copy()
@@ -138,10 +219,13 @@ class ServeLoop:
         logits, self.cache = self._decode(self.params, batch, self.cache)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         if self.meter is not None:
-            # the step's Ws splits evenly across the requests in the batch
-            ws = self.meter.observe(self.clock() - t0,
-                                    util=len(participants) / self.slots,
-                                    phase="decode",
+            # the step's Ws splits evenly across the requests in the batch;
+            # the measured occupancy (slots that actually decoded this
+            # window) drives the envelope through the utilization signal
+            dt = self.clock() - t0
+            util = len(participants) / self.slots
+            self._record_util("decode", dt, util)
+            ws = self.meter.observe(dt, util=util, phase="decode",
                                     tenants=[r.tenant for r in participants])
             for r in participants:
                 r.energy_ws += ws / len(participants)
@@ -175,7 +259,7 @@ class ServeLoop:
         """Drain queue + active slots; returns requests finished this run."""
         n0 = len(self.finished)
         for _ in range(max_steps):
-            if not self.queue and all(r is None for r in self.active):
+            if not self.has_work:
                 break
             self.step()
         if self.governor is not None and self.meter is not None:

@@ -15,9 +15,10 @@ and the replay rung re-reads persisted JSONL traces.  Every rung's
 ``Measurement.energy_j`` equals its trace's ``integrate()``.
 """
 from repro.telemetry.trace import PhaseSpan, PowerTrace  # noqa: F401
-from repro.telemetry.dvfs import (PhaseUtilization,  # noqa: F401
-                                  PowerEnvelope, UtilizationSpan,
-                                  envelope_for, node_envelope)
+from repro.telemetry.dvfs import (LiveUtilization,  # noqa: F401
+                                  PhaseUtilization, PowerEnvelope,
+                                  UtilizationSpan, envelope_for,
+                                  node_envelope)
 from repro.telemetry.sampler import (ConstantSource,  # noqa: F401
                                      ModeledSource, PowerSampler,
                                      ReplaySource, TickClock,
@@ -25,7 +26,8 @@ from repro.telemetry.sampler import (ConstantSource,  # noqa: F401
                                      synthesize_phase_trace)
 from repro.telemetry.energy import (DEFAULT_NODE,  # noqa: F401
                                     DEFAULT_TENANT, DecodeEnergyMeter,
-                                    EnergyLedger, PhaseEnergy)
+                                    EnergyLedger, PhaseEnergy, WsBudget,
+                                    drain_delta)
 from repro.telemetry.compare import (RequestEnergy, RunEnergy,  # noqa: F401
                                      WsComparison, ab_sample, compare)
 from repro.telemetry.governor import (GovernorEvent,  # noqa: F401

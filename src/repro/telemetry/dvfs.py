@@ -161,6 +161,56 @@ class PhaseUtilization:
         return {n: u / dt for n, (u, dt) in acc.items()}
 
 
+class LiveUtilization(PhaseUtilization):
+    """An append-only ``PhaseUtilization`` fed by a live loop.
+
+    Starts empty and grows as the producer measures: ``ServeLoop`` records
+    each step's *real* slot-occupancy window here (on the meter's
+    cumulative timeline) right before booking the step's energy, so the
+    envelope is driven by what the slots actually did rather than by a
+    schedule-derived constant passed alongside the observation.  The same
+    object doubles as the loop's occupancy log: ``per_phase()`` renders
+    the measured utilization per phase after the run.
+
+    Memory stays bounded for long-running loops: only the newest
+    ``maxlen`` spans are kept addressable by time (the meter only ever
+    probes the freshest window), while evicted spans fold into a
+    per-phase ``(util x dt, dt)`` accumulator so ``per_phase()`` remains
+    exact over the whole history.
+    """
+
+    def __init__(self, maxlen: int = 4096) -> None:
+        self.spans: list[UtilizationSpan] = []
+        self.maxlen = maxlen
+        self._folded: dict = {}         # name -> (sum util*dt, sum dt)
+
+    def record(self, name: str, t0: float, t1: float,
+               util: float) -> UtilizationSpan:
+        span = UtilizationSpan(name, float(t0), float(t1), float(util))
+        self.spans.append(span)
+        if len(self.spans) > self.maxlen:
+            old = self.spans.pop(0)
+            u, dt = self._folded.get(old.name, (0.0, 0.0))
+            self._folded[old.name] = (u + old.util * max(old.seconds, 1e-12),
+                                      dt + max(old.seconds, 1e-12))
+        return span
+
+    def __call__(self, t: float) -> float:
+        # live consumers (the meter) always probe the freshest window
+        for s in reversed(self.spans):
+            if s.t0 <= t <= s.t1:
+                return s.util
+        return 0.0
+
+    def per_phase(self) -> dict:
+        acc = dict(self._folded)
+        for s in self.spans:
+            u, dt = acc.get(s.name, (0.0, 0.0))
+            acc[s.name] = (u + s.util * max(s.seconds, 1e-12),
+                           dt + max(s.seconds, 1e-12))
+        return {n: u / dt for n, (u, dt) in acc.items()}
+
+
 @dataclass
 class ModeledSource:
     """Envelope x utilization -> instantaneous watts (per node of `chips`).

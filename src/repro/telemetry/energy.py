@@ -240,6 +240,82 @@ class EnergyLedger:
         return f"total={self.total_ws:.1f}Ws [" + " ".join(parts) + "]"
 
 
+def drain_delta(src: EnergyLedger, into: EnergyLedger, snapshot: dict,
+                node: str, phases: tuple = ()) -> tuple[float, float]:
+    """Book the per-cell delta of ``src`` since ``snapshot`` into ``into``.
+
+    This is the one flush primitive every fleet-plane consumer shares: the
+    per-node ``PowerGovernor`` and the ``FleetScheduler`` both periodically
+    drain a meter's ledger into their own, and both need the same
+    guarantees — deltas only (re-flushing without new energy books
+    nothing), tenant/phase cells carried through unchanged, and the node
+    dimension re-labelled to ``node``.  ``snapshot`` maps cell keys to the
+    ``(ws, seconds, count)`` high-water marks of the previous drain and is
+    updated in place.
+
+    Returns the drained window's ``(ws, seconds)`` summed over ``phases``
+    (every phase when the tuple is empty) — the drift-monitor signal.
+    """
+    window_ws = window_s = 0.0
+    for key, cell in src.cells.items():
+        ws0, s0, c0 = snapshot.get(key, (0.0, 0.0, 0))
+        d_ws, d_s, d_c = cell.ws - ws0, cell.seconds - s0, cell.count - c0
+        if d_c <= 0 and d_ws == 0.0:
+            continue
+        _, tenant, phase = key
+        into.add(phase, d_ws, d_s, peak_w=cell.peak_w, node=node,
+                 tenant=tenant, count=max(d_c, 1))
+        snapshot[key] = (cell.ws, cell.seconds, cell.count)
+        if not phases or phase in phases:
+            window_ws += d_ws
+            window_s += d_s
+    return window_ws, window_s
+
+
+@dataclass
+class WsBudget:
+    """Per-tenant Watt*second allowance over a rolling step window.
+
+    The admission side of the fleet plane: a tenant may book at most
+    ``budget_ws`` into the ledger per ``window_steps`` scheduler steps
+    (``0`` makes it one whole-run budget).  Spend is read straight off the
+    ledger's tenant rollup — whatever books energy (live meters, merged
+    per-node ledgers, replays) is what bills — so admission control and
+    the energy bill can never disagree.
+
+    ``roll`` advances the window; once a window closes, its spend is
+    forgiven and the tenant is admitted again — exhaustion inside a window
+    is *throttling*, not a permanent ban.
+    """
+    budget_ws: float
+    window_steps: int = 0
+    _window_start: int = 0
+    _baseline_ws: float = 0.0
+
+    @staticmethod
+    def tenant_ws(ledger: EnergyLedger, tenant: str) -> float:
+        pe = ledger.rollup("tenant").get(tenant)
+        return pe.ws if pe is not None else 0.0
+
+    def roll(self, step: int, ledger: EnergyLedger, tenant: str) -> None:
+        """Advance the window when ``step`` crossed its boundary."""
+        if self.window_steps <= 0 or step - self._window_start \
+                < self.window_steps:
+            return
+        n = (step - self._window_start) // self.window_steps
+        self._window_start += n * self.window_steps
+        self._baseline_ws = self.tenant_ws(ledger, tenant)
+
+    def spent_ws(self, ledger: EnergyLedger, tenant: str) -> float:
+        return self.tenant_ws(ledger, tenant) - self._baseline_ws
+
+    def remaining_ws(self, ledger: EnergyLedger, tenant: str) -> float:
+        return self.budget_ws - self.spent_ws(ledger, tenant)
+
+    def exhausted(self, ledger: EnergyLedger, tenant: str) -> bool:
+        return self.remaining_ws(ledger, tenant) <= 0.0
+
+
 @dataclass
 class DecodeEnergyMeter:
     """Live per-step decode energy for the serving loop.
@@ -273,12 +349,29 @@ class DecodeEnergyMeter:
     ledger: EnergyLedger = field(default_factory=EnergyLedger)
     _now: float = 0.0
 
+    @property
+    def now(self) -> float:
+        """The meter's cumulative busy-time timeline (seconds observed so
+        far) — the time base of its trace, utilization signal and
+        source."""
+        return self._now
+
     def watts_at(self, t: float, util: float = 1.0) -> float:
         if self.source is not None:
             return self.source.watts(t) * self.chips
         if self.utilization is not None:
             util = min(max(float(self.utilization(t)), 0.0), 1.0)
         return self.envelope.watts(util) * self.chips
+
+    def predict_watts(self, util: float, dt_ahead: float = 0.0) -> float:
+        """What-if draw a little ahead of the timeline at a hypothetical
+        utilization — the router's routing signal.  Bypasses the measured
+        ``utilization`` signal (which cannot know about work that has not
+        been routed yet) but honours a ``source`` override, so a node
+        replaying a drift tail predicts its *drifted* watts."""
+        if self.source is not None:
+            return self.source.watts(self._now + dt_ahead) * self.chips
+        return self.envelope.watts(min(max(util, 0.0), 1.0)) * self.chips
 
     def observe(self, seconds: float, util: float = 1.0,
                 phase: str = "decode",

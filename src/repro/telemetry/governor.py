@@ -37,11 +37,11 @@ ledgers) without touching the device.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 from repro.telemetry.energy import (DEFAULT_NODE, DecodeEnergyMeter,
-                                    EnergyLedger)
+                                    EnergyLedger, drain_delta)
 
 
 @dataclass(frozen=True)
@@ -155,21 +155,9 @@ class PowerGovernor:
         apply)."""
         node = node or getattr(meter, "node", DEFAULT_NODE)
         snap = self._snapshots.setdefault(node, {})
-        window_ws = window_s = 0.0
-        for key, cell in meter.ledger.cells.items():
-            ws0, s0, c0 = snap.get(key, (0.0, 0.0, 0))
-            d_ws, d_s, d_c = cell.ws - ws0, cell.seconds - s0, \
-                cell.count - c0
-            if d_c <= 0 and d_ws == 0.0:
-                continue
-            _, tenant, phase = key
-            self.ledger.add(phase, d_ws, d_s, peak_w=cell.peak_w,
-                            node=node, tenant=tenant, count=max(d_c, 1))
-            snap[key] = (cell.ws, cell.seconds, cell.count)
-            if not self.policy.drift_phases \
-                    or phase in self.policy.drift_phases:
-                window_ws += d_ws
-                window_s += d_s
+        window_ws, window_s = drain_delta(meter.ledger, self.ledger, snap,
+                                          node,
+                                          phases=self.policy.drift_phases)
         if (window_s <= 0 and window_ws <= 0) or not govern:
             return None
         new_plan = self.monitor(node).observe(step, window_s, self.plan,

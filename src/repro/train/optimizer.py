@@ -9,7 +9,6 @@ second-moment estimate of an (m, n) matrix is stored as an (m,) row vector +
 """
 from __future__ import annotations
 
-import math
 from typing import Any
 
 import jax

@@ -9,12 +9,11 @@ transfer-batching analogue at the gradient level).
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ArchConfig
 from repro.models.model import Model
 from repro.parallel.sharding import ShardingRules
 from repro.train import compress as C

@@ -1,0 +1,94 @@
+"""Deterministic in-memory serving stubs for fleet-plane tests.
+
+``SimLoop`` honours the slice of the ``ServeLoop`` surface the
+``FleetScheduler`` and ``Node`` depend on (submit/step/park/drain, slot
+occupancy, finished bookkeeping, a metered decode phase) without touching
+jax — so scheduler policies (routing, admission, drift drains) and the
+hypothesis invariants can run thousands of fleet steps in milliseconds.
+Model-level behaviour (real prefill/decode, request resume through the
+cache) is covered by the ServeLoop tests in ``test_fleet.py``.
+"""
+from repro.fleet.node import Node
+from repro.telemetry import ConstantSource, DecodeEnergyMeter, envelope_for
+
+
+class SimLoop:
+    """Fixed-step decode simulator over the ServeLoop scheduling surface."""
+
+    def __init__(self, slots: int, meter: DecodeEnergyMeter,
+                 step_s: float = 0.01):
+        self.slots = slots
+        self.meter = meter
+        self.step_s = step_s
+        self.queue = []
+        self.active = [None] * slots
+        self.finished = []
+        self.parked = False
+        self.steps_done = 0
+
+    @property
+    def occupied_slots(self) -> int:
+        return sum(1 for r in self.active if r is not None)
+
+    @property
+    def has_work(self) -> bool:
+        return self.occupied_slots > 0 or bool(self.queue
+                                               and not self.parked)
+
+    def submit(self, req) -> None:
+        self.queue.append(req)
+
+    def park(self) -> None:
+        self.parked = True
+
+    def unpark(self) -> None:
+        self.parked = False
+
+    def drain(self, include_queue: bool = True):
+        moved = []
+        if include_queue:
+            moved.extend(self.queue)
+            self.queue.clear()
+        for i, req in enumerate(self.active):
+            if req is not None:
+                self.active[i] = None
+                moved.append(req)
+        return moved
+
+    def step(self) -> int:
+        if not self.parked:
+            for i in range(self.slots):
+                if self.active[i] is None and self.queue:
+                    self.active[i] = self.queue.pop(0)
+        participants = [r for r in self.active if r is not None]
+        if not participants:
+            return 0
+        ws = self.meter.observe(self.step_s,
+                                util=len(participants) / self.slots,
+                                phase="decode",
+                                tenants=[r.tenant for r in participants])
+        n_active = 0
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            req.out.append(0)
+            req.energy_ws += ws / len(participants)
+            req.decode_ws += ws / len(participants)
+            if len(req.out) >= req.max_new:
+                req.done = True
+                self.active[i] = None
+                self.finished.append(req)
+            else:
+                n_active += 1
+        self.steps_done += 1
+        return n_active
+
+
+def sim_node(name: str, watts: float, slots: int = 2,
+             step_s: float = 0.01) -> Node:
+    """A fleet node whose meter replays a constant ``watts`` draw."""
+    from repro.core.power import V5E
+    meter = DecodeEnergyMeter(envelope=envelope_for(V5E),
+                              source=ConstantSource(watts), node=name)
+    return Node(name=name, loop=SimLoop(slots, meter, step_s=step_s),
+                meter=meter, nominal_step_s=step_s)

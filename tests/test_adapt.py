@@ -2,7 +2,7 @@
 import pytest
 
 from repro.configs import get_config
-from repro.core.adapt import (AdaptationReport, CostModel, ReconfigPolicy,
+from repro.core.adapt import (CostModel, ReconfigPolicy,
                               Reconfigurator, adapt, adjust_placement,
                               adjust_resources)
 from repro.core.destinations import Requirement

@@ -207,9 +207,40 @@ def test_load_stage_sidecar_rejects_malformed(tmp_path):
     assert load_stage_sidecar(p) is None
     p.write_text(json.dumps({"stages": [{"name": "x"}]}))   # no t0/t1
     assert load_stage_sidecar(p) is None
+    # values are validated too, not just key presence: non-numeric or
+    # non-monotonic windows would crash the stage sampler downstream
+    p.write_text(json.dumps({"stages": [
+        {"name": "x", "t0": "oops", "t1": 2.0, "util": 1.0}]}))
+    assert load_stage_sidecar(p) is None
+    p.write_text(json.dumps({"stages": [
+        {"name": "a", "t0": 0.0, "t1": 2.0, "util": 1.0},
+        {"name": "b", "t0": 0.5, "t1": 1.5, "util": 1.0}]}))  # overlap
+    assert load_stage_sidecar(p) is None
+    p.write_text(json.dumps({"stages": [
+        {"name": "a", "t0": 1.0, "t1": 0.5, "util": 1.0}]}))  # t1 < t0
+    assert load_stage_sidecar(p) is None
     good = {"stages": _stages(("compile", 1.0, 0.5))}
     p.write_text(json.dumps(good))
     assert load_stage_sidecar(p) == good["stages"]
+
+
+def test_run_cell_cache_without_sidecar_relowers(tmp_path, monkeypatch):
+    """A pre-sidecar OK record (cached by an old run) must re-lower so
+    the compiled rung gets its measurement input, instead of being
+    honoured forever and penalizing the plan on every retry."""
+    import repro.launch.dryrun as dryrun
+    monkeypatch.setattr(dryrun, "ART", tmp_path)
+    key = "tiny-test__decode_32k__pod16x16"
+    (tmp_path / f"{key}.json").write_text(json.dumps({"status": "OK"}))
+    rec = dryrun.run_cell("tiny-test", "decode_32k", multi_pod=False)
+    assert rec["status"] in ("OK", "FAIL")     # re-lowered, no early return
+    assert "arch" in rec                        # a fresh record, not the stub
+    assert (tmp_path / f"{key}.stages.json").is_file()
+    # a cached SKIP/FAIL record (which never writes a sidecar) is honoured
+    stub = {"status": "SKIP", "reason": "x"}
+    (tmp_path / f"{key}.json").write_text(json.dumps(stub))
+    assert dryrun.run_cell("tiny-test", "decode_32k",
+                           multi_pod=False) == stub
 
 
 def test_run_cell_malformed_cache_falls_back_to_relower(tmp_path,

@@ -1,6 +1,5 @@
 """Tests for the paper's contribution: fitness, GA, narrowing, destinations,
 power model, verifier (unit + property)."""
-import math
 
 import numpy as np
 import pytest
@@ -12,7 +11,7 @@ from repro.core import (GAConfig, PowerModel, Verifier, V5E, fitness,
                         narrow_candidates, run_ga, select_destination)
 from repro.core.destinations import Requirement
 from repro.core.fitness import TIMEOUT_PENALTY_S, fitness_time_only
-from repro.core.plan import GENES, PlanGenome
+from repro.core.plan import PlanGenome
 from repro.core.verifier import penalty_measurement
 
 

@@ -1,0 +1,423 @@
+"""Fleet control plane: routing, admission, cross-node migration.
+
+The acceptance loop for the fleet layer above PR 2's per-node governor:
+requests route to the node with the lowest predicted marginal Ws/token, a
+drifted node's load drains to healthy nodes at a checkpoint boundary
+(exactly one ``FleetEvent``), the merged fleet ledger conserves every
+node meter's joules, and tenants that exhaust their Ws budget are
+throttled with zero booked energy.
+"""
+import numpy as np
+import pytest
+
+from fleet_sim import sim_node
+from repro.configs import get_config
+from repro.fleet import (AdmissionController, FleetPolicy, FleetScheduler,
+                         Node)
+from repro.serve.engine import Request
+from repro.telemetry import (ConstantSource, EnergyLedger, ReplaySource,
+                             TickClock, WsBudget, drain_delta)
+
+TICK = 0.005
+
+
+def _req(rid, tenant="default", max_new=4, prompt_len=4):
+    return Request(rid=rid, prompt=np.full(prompt_len, 2, np.int32),
+                   max_new=max_new, tenant=tenant)
+
+
+# ---------------------------------------------------------------------------
+# Budget windows + the shared flush primitive
+# ---------------------------------------------------------------------------
+
+def test_ws_budget_windows_roll_and_forgive():
+    led = EnergyLedger()
+    budget = WsBudget(budget_ws=5.0, window_steps=10)
+    assert not budget.exhausted(led, "t")
+    led.add("decode", 6.0, 0.1, tenant="t")
+    assert budget.spent_ws(led, "t") == pytest.approx(6.0)
+    assert budget.exhausted(led, "t")          # over budget inside window
+    budget.roll(9, led, "t")
+    assert budget.exhausted(led, "t")          # window not crossed yet
+    budget.roll(10, led, "t")                  # boundary: spend forgiven
+    assert budget.spent_ws(led, "t") == pytest.approx(0.0)
+    assert not budget.exhausted(led, "t")
+    assert budget.remaining_ws(led, "t") == pytest.approx(5.0)
+    # whole-run budget (window_steps=0) never forgives
+    run_budget = WsBudget(budget_ws=5.0)
+    run_budget.roll(10_000, led, "t")
+    assert run_budget.exhausted(led, "t")
+
+
+def test_drain_delta_is_incremental_and_phase_filtered():
+    src, dst, snap = EnergyLedger(), EnergyLedger(), {}
+    src.add("decode", 10.0, 0.1, node="meter", tenant="a")
+    src.add("prefill", 4.0, 0.05, node="meter", tenant="b")
+    ws, s = drain_delta(src, dst, snap, "podX", phases=("decode",))
+    assert ws == pytest.approx(10.0) and s == pytest.approx(0.1)
+    assert dst.total_ws == pytest.approx(14.0)      # every phase books
+    assert dst.rollup("node").keys() == {"podX"}    # node re-labelled
+    assert dst.rollup("tenant")["b"].ws == pytest.approx(4.0)
+    # nothing new -> nothing drained
+    assert drain_delta(src, dst, snap, "podX") == (0.0, 0.0)
+    assert dst.total_ws == pytest.approx(14.0)
+    src.add("decode", 1.0, 0.01, node="meter", tenant="a")
+    ws, _ = drain_delta(src, dst, snap, "podX", phases=("decode",))
+    assert ws == pytest.approx(1.0)
+    assert dst.total_ws == pytest.approx(15.0)
+
+
+# ---------------------------------------------------------------------------
+# Routing (policy 1)
+# ---------------------------------------------------------------------------
+
+def test_energy_router_prefers_cheapest_marginal_ws_per_token():
+    cool, hot = sim_node("cool", 100.0), sim_node("hot", 300.0)
+    sched = FleetScheduler([cool, hot])
+    assert cool.marginal_ws_per_token() < hot.marginal_ws_per_token()
+    assert sched.route(_req(0)) is cool
+    # consolidation: sharing the cool node's batch stays cheaper than
+    # waking the hot node
+    cool.submit(_req(0))
+    assert sched.route(_req(1)) is cool
+    # a parked node prices itself out entirely
+    cool.loop.park()
+    assert cool.marginal_ws_per_token() == float("inf")
+    assert sched.route(_req(2)) is hot
+    hot.loop.park()
+    with pytest.raises(RuntimeError):
+        sched.route(_req(3))
+
+
+def test_round_robin_router_is_energy_blind():
+    cool, hot = sim_node("cool", 100.0), sim_node("hot", 300.0)
+    sched = FleetScheduler([cool, hot],
+                           policy=FleetPolicy(router="round_robin"))
+    picks = [sched.route(_req(i)).name for i in range(4)]
+    assert picks == ["cool", "hot", "cool", "hot"]
+    with pytest.raises(ValueError):
+        FleetPolicy(router="cheapest")
+    with pytest.raises(ValueError):
+        FleetPolicy(flush_every=0)
+
+
+def test_router_books_no_energy_on_unrouted_nodes():
+    """A node the router never picked must end the run with zero Ws in
+    the fleet ledger (its meter never observed anything)."""
+    cool, hot = sim_node("cool", 100.0, slots=4), sim_node("hot", 300.0)
+    sched = FleetScheduler([cool, hot])
+    for i in range(4):
+        assert sched.submit(_req(i)) is cool
+    sched.run()
+    assert not hot.served
+    assert hot.meter.ledger.total_ws == 0.0
+    assert "hot" not in sched.ledger.rollup("node")
+    assert sched.ledger.rollup("node")["cool"].ws == \
+        pytest.approx(cool.meter.ledger.total_ws)
+
+
+# ---------------------------------------------------------------------------
+# Admission (policy 3)
+# ---------------------------------------------------------------------------
+
+def test_admission_throttles_exhausted_tenant_with_zero_ws():
+    node = sim_node("n0", 100.0, slots=2)
+    admission = AdmissionController({"burst": WsBudget(budget_ws=0.5)})
+    sched = FleetScheduler([node], admission=admission)
+    assert sched.submit(_req(0, tenant="burst")) is node   # under budget
+    sched.run()
+    spent = WsBudget.tenant_ws(sched.ledger, "burst")
+    assert spent > 0.5                          # ... and now exhausted
+    assert sched.submit(_req(1, tenant="burst")) is None
+    assert sched.submit(_req(2, tenant="steady")) is node  # others admitted
+    sched.run()
+    # the rejection is logged and booked NOTHING: burst's bill is
+    # exactly what its one served request burned
+    assert [r.rid for r in admission.rejections] == [1]
+    assert "0.50Ws" in admission.rejections[0].reason
+    assert WsBudget.tenant_ws(sched.ledger, "burst") == pytest.approx(spent)
+    assert admission.summary(sched.ledger)["burst"]["rejected"] == 1
+
+
+def test_admission_window_readmits_after_roll():
+    node = sim_node("n0", 100.0, slots=2)
+    admission = AdmissionController(
+        {"t": WsBudget(budget_ws=0.5, window_steps=8)})
+    sched = FleetScheduler([node], admission=admission)
+    assert sched.submit(_req(0, tenant="t")) is node
+    sched.run()                                 # exhausts the window
+    assert sched.submit(_req(1, tenant="t")) is None
+    sched.steps += 8                            # next budget window
+    assert sched.submit(_req(2, tenant="t")) is node
+    assert [r.rid for r in admission.rejections] == [1]
+
+
+def test_admission_reads_unflushed_spend():
+    """The admit check must see energy the flush cadence has not booked
+    yet: with a huge flush_every, a tenant's second submit after its
+    budget burned is still rejected (no overshoot window)."""
+    node = sim_node("n0", 100.0, slots=2)
+    admission = AdmissionController({"t": WsBudget(budget_ws=0.5)})
+    sched = FleetScheduler([node], admission=admission,
+                           policy=FleetPolicy(flush_every=10_000,
+                                              checkpoint_every=10_000))
+    assert sched.submit(_req(0, tenant="t", max_new=8)) is node
+    while node.has_work:                    # serve WITHOUT any flush
+        sched.step()
+    assert sched.ledger.total_ws == 0.0     # nothing booked yet ...
+    assert sched.submit(_req(1, tenant="t")) is None   # ... still rejected
+    assert sched.ledger.total_ws == pytest.approx(
+        node.meter.ledger.total_ws)         # admit drained the meters
+    assert [r.rid for r in admission.rejections] == [1]
+
+
+def test_drained_node_never_receives_its_own_load():
+    """With park_drained=False the drained node stays routable for *new*
+    traffic but must not be handed back the load just drained off it."""
+    sick = sim_node("a-sick", 100.0, slots=2)
+    sick.meter.source = ReplaySource([(0.0, 100.0), (0.2, 300.0)])
+    ok = sim_node("b-ok", 100.0, slots=2)
+    sched = FleetScheduler(
+        [sick, ok], policy=FleetPolicy(flush_every=2, checkpoint_every=4,
+                                       degrade_factor=1.5,
+                                       park_drained=False,
+                                       router="round_robin"))
+    sick.submit(_req(0, max_new=40))        # place directly on the sick node
+    sick.submit(_req(1, max_new=40))
+    sched.run()
+    assert len(sched.events) == 1
+    assert sched.events[0].targets == ("b-ok",)
+    assert not sick.parked                  # un-parked by policy ...
+    assert sched.route(_req(9)) in (sick, ok)   # ... and still routable
+
+
+def test_admission_default_budget_covers_unknown_tenants():
+    admission = AdmissionController(default=WsBudget(budget_ws=1.0))
+    led = EnergyLedger()
+    led.add("decode", 2.0, 0.1, tenant="anyone")
+    assert not admission.admit(_req(0, tenant="anyone"), 0, led)
+    assert admission.admit(_req(1, tenant="fresh"), 0, led)
+    # each tenant got a private budget instance
+    assert admission.budgets["anyone"] is not admission.budgets["fresh"]
+
+
+# ---------------------------------------------------------------------------
+# Migration (policy 2) on sim nodes: drift -> checkpointed drain
+# ---------------------------------------------------------------------------
+
+def test_drift_drain_parks_at_checkpoint_and_migrates_load():
+    # names pick the drifting node first on the initial route tie-break
+    sick = sim_node("a-sick", 100.0, slots=2)
+    # drift tail on the sick node: watts triple after 0.2s busy time
+    sick.meter.source = ReplaySource([(0.0, 100.0), (0.2, 300.0)])
+    ok = sim_node("b-ok", 100.0, slots=2)
+    sched = FleetScheduler(
+        [sick, ok], policy=FleetPolicy(flush_every=2, checkpoint_every=4,
+                                       degrade_factor=1.5))
+    for i in range(2):
+        assert sched.submit(_req(i, max_new=40)) is sick
+    finished = sched.run()
+    assert len(sched.events) == 1
+    ev = sched.events[0]
+    assert ev.node == "a-sick" and ev.targets == ("b-ok",)
+    assert ev.step % sched.policy.checkpoint_every == 0
+    assert ev.detected_step <= ev.step
+    assert ev.drift_ratio > 1.5
+    assert sorted(ev.moved_rids) == [0, 1]
+    assert sick.parked and not ok.parked
+    # the load finished on the healthy node, energy fully conserved
+    assert sorted(r.rid for r in finished) == [0, 1]
+    assert all(len(r.out) == 40 for r in finished)
+    assert sched.ledger.total_ws == pytest.approx(
+        sick.meter.ledger.total_ws + ok.meter.ledger.total_ws, rel=1e-12)
+
+
+def test_no_drain_without_a_healthy_target():
+    """A drifting node with nowhere to go keeps serving (no event)."""
+    solo = sim_node("solo", 100.0, slots=2)
+    solo.meter.source = ReplaySource([(0.0, 100.0), (0.1, 400.0)])
+    sched = FleetScheduler(
+        [solo], policy=FleetPolicy(flush_every=2, checkpoint_every=4,
+                                   degrade_factor=1.5))
+    sched.submit(_req(0, max_new=60))
+    finished = sched.run()
+    assert sched.events == []
+    assert not solo.parked
+    assert [r.rid for r in finished] == [0]
+
+
+# ---------------------------------------------------------------------------
+# ServeLoop fleet surface: park / drain / resume + measured occupancy
+# ---------------------------------------------------------------------------
+
+def _serve_node(name, model, params, source=None, slots=2):
+    return Node.build(name, model, params, slots=slots, max_seq=64,
+                      eos_id=-1, source=source, clock=TickClock(TICK),
+                      nominal_step_s=TICK)
+
+
+@pytest.fixture(scope="module")
+def tiny_model(rng_key):
+    from repro.models.model import Model
+    cfg = get_config("tiny-test")
+    model = Model(cfg)
+    return cfg, model, model.init(rng_key)
+
+
+def test_serve_loop_drain_resumes_on_another_loop(tiny_model):
+    """An evicted mid-generation request continues on a second loop and
+    ends with exactly the tokens it was promised."""
+    cfg, model, params = tiny_model
+    a = _serve_node("a", model, params)
+    b = _serve_node("b", model, params)
+    req = _req(0, max_new=9, prompt_len=4)
+    a.submit(req)
+    for _ in range(5):
+        a.loop.step()
+    assert len(req.out) == 5 and not req.done
+    a.loop.park()
+    moved = a.drain()
+    assert moved == [req]
+    assert a.loop.occupied_slots == 0 and not a.loop.has_work
+    mid_ws = req.energy_ws
+    b.submit(req)
+    while b.loop.has_work:
+        b.loop.step()
+    finished = b.loop.finished
+    assert finished == [req] and req.done
+    assert len(req.out) == 9
+    # the resume teacher-forced prompt+output through b's cache: b booked
+    # a prefill for it, and the request's bill kept growing
+    assert b.meter.ledger.phases["prefill"].count == 1
+    assert req.energy_ws > mid_ws
+    # a parked loop refuses new fills but finishes nothing silently
+    a.submit(_req(1))
+    assert not a.loop.has_work
+    assert a.loop.step() == 0
+    assert a.loop.queue and a.loop.occupied_slots == 0
+
+
+def test_serve_loop_books_measured_slot_occupancy(tiny_model):
+    """The meter's utilization signal is the loop's measured occupancy —
+    real counters through LiveUtilization, not the schedule constant."""
+    cfg, model, params = tiny_model
+    node = _serve_node("m", model, params, slots=2)
+    loop = node.loop
+    assert loop.utilization is not None
+    assert node.meter.utilization is loop.utilization
+    node.submit(_req(0, max_new=6))           # one slot of two occupied
+    while loop.has_work:
+        loop.step()
+    per_phase = loop.utilization.per_phase()
+    assert per_phase["decode"] == pytest.approx(0.5)   # 1/2 slots measured
+    assert per_phase["prefill"] == pytest.approx(0.5)
+    # the envelope was evaluated at the measured 0.5, exactly as the
+    # schedule-derived fraction would have been — same joules, now from a
+    # measured signal
+    env = node.meter.envelope
+    want = env.watts(0.5) * (loop.steps_done + 1) * TICK
+    assert node.meter.ledger.total_ws == pytest.approx(want, rel=1e-9)
+    # every recorded span lives on the meter timeline, in [0, 1]
+    for span in loop.utilization.spans:
+        assert 0.0 <= span.util <= 1.0
+        assert span.t1 <= node.meter.now + 1e-9
+
+
+def test_live_utilization_bounded_but_exact():
+    """The live occupancy signal keeps O(maxlen) spans; evicted history
+    folds into per-phase stats that stay exact over the whole run."""
+    from repro.telemetry import LiveUtilization
+    live = LiveUtilization(maxlen=4)
+    t = 0.0
+    for i in range(12):
+        phase = "decode" if i % 2 else "prefill"
+        live.record(phase, t, t + 1.0, util=0.25 if i % 2 else 0.75)
+        t += 1.0
+    assert len(live.spans) == 4                 # bounded window
+    per = live.per_phase()
+    assert per["decode"] == pytest.approx(0.25)  # exact over all 12 spans
+    assert per["prefill"] == pytest.approx(0.75)
+    assert live(t - 0.5) in (0.25, 0.75)        # fresh windows addressable
+    assert live(0.5) == 0.0                     # evicted history reads idle
+
+
+# ---------------------------------------------------------------------------
+# The deterministic two-node end-to-end (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_fleet_two_node_drift_end_to_end(tiny_model):
+    cfg, model, params = tiny_model
+    # n0: boost-watts drift tail after 0.06s of busy time; n1 healthy
+    n0 = _serve_node("n0", model, params, slots=4,
+                     source=ReplaySource([(0.0, 150.0), (0.06, 450.0)]))
+    n1 = _serve_node("n1", model, params, slots=4,
+                     source=ConstantSource(150.0))
+    sched = FleetScheduler(
+        [n0, n1], policy=FleetPolicy(flush_every=2, checkpoint_every=4,
+                                     degrade_factor=1.5))
+    reqs = [_req(i, tenant=f"tenant{i % 2}", max_new=20) for i in range(4)]
+    for r in reqs:
+        assert sched.submit(r) is n0          # consolidates on one node
+    finished = sched.run()
+
+    # exactly one cross-node FleetEvent, applied at a checkpoint boundary
+    assert len(sched.events) == 1
+    ev = sched.events[0]
+    assert ev.node == "n0" and ev.targets == ("n1",)
+    assert ev.step % sched.policy.checkpoint_every == 0
+    assert ev.detected_step <= ev.step
+    assert ev.drift_ratio > 1.5
+    assert sorted(ev.moved_rids) == [0, 1, 2, 3]
+    assert n0.parked
+
+    # new traffic routes to the healthy node
+    assert sched.route(_req(99)) is n1
+
+    # every request survived the migration with its full token budget
+    assert sorted(r.rid for r in finished) == [0, 1, 2, 3]
+    assert all(len(r.out) == 20 and r.done for r in reqs)
+
+    # the merged fleet ledger's joules equal the two meters' exactly,
+    # and every rollup cut agrees
+    total = n0.meter.ledger.total_ws + n1.meter.ledger.total_ws
+    assert sched.ledger.total_ws == pytest.approx(total, rel=1e-12)
+    for by in ("node", "tenant", "phase"):
+        assert sum(pe.ws for pe in sched.ledger.rollup(by).values()) == \
+            pytest.approx(total, rel=1e-12)
+    roll = sched.ledger.rollup("node")
+    assert roll["n0"].ws == pytest.approx(n0.meter.ledger.total_ws,
+                                          rel=1e-12)
+    assert roll["n1"].ws == pytest.approx(n1.meter.ledger.total_ws,
+                                          rel=1e-12)
+    # per-request attribution also survived the hop across nodes
+    assert sum(r.energy_ws for r in reqs) == pytest.approx(total, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run host counters (psutil sidecar satellite)
+# ---------------------------------------------------------------------------
+
+def test_stage_clock_prefers_psutil_and_keeps_fallback():
+    import time as _time
+
+    from repro.launch.dryrun import _PSUTIL_PROC, StageClock
+
+    clock = StageClock()
+    with clock.stage("busy"):
+        sum(i * i for i in range(200_000))
+    with clock.stage("idle"):
+        _time.sleep(0.02)
+    want_src = "psutil" if _PSUTIL_PROC is not None else "process_time"
+    assert [s["util_src"] for s in clock.stages] == [want_src] * 2
+    busy, idle = clock.stages
+    assert 0.0 <= idle["util"] <= 1.0 and 0.0 <= busy["util"] <= 1.0
+    assert idle["util"] < 0.5          # sleeping burns no CPU
+    # fallback path: no psutil process -> stdlib process-time ratio
+    fallback = StageClock(proc=None)
+    with fallback.stage("busy"):
+        sum(i * i for i in range(50_000))
+    assert fallback.stages[0]["util_src"] == "process_time"
+    assert 0.0 <= fallback.stages[0]["util"] <= 1.0
+    # the sidecar stays loadable by the compiled rung's parser
+    side = clock.sidecar()
+    assert {"name", "t0", "t1", "util", "util_src"} <= set(side["stages"][0])

@@ -1,6 +1,6 @@
 """Property tests for telemetry invariants (needs the hypothesis dev dep).
 
-Five invariants the rest of the stack leans on:
+Invariants the rest of the stack leans on:
 
   * JSONL persistence is lossless: save/load round-trips preserve phase
     markers, samples, metadata and the Ws integral;
@@ -12,7 +12,11 @@ Five invariants the rest of the stack leans on:
     process counters reported;
   * a compiled-rung measurement's ``energy_j`` equals its wall-clock-
     sampled trace's ``integrate()`` — the rung invariant every Watt·second
-    comparison stands on.
+    comparison stands on;
+  * the fleet plane conserves joules: merging per-node ledgers conserves
+    ``total_ws`` and every rollup cut, the router never books energy to a
+    node that served zero requests, and admission rejections book exactly
+    zero Ws.
 """
 import pytest
 
@@ -160,3 +164,123 @@ def test_compiled_rung_energy_equals_trace_integral(specs):
         assert 0.0 <= u <= 1.0
     # the trace really is wall-clock stage-sampled, not synthesized
     assert m.trace.meta.get("sampled") == "wall_clock_stages"
+
+
+# ---------------------------------------------------------------------------
+# Fleet-ledger invariants: merge conservation, routing, admission
+# ---------------------------------------------------------------------------
+
+# bookings: (node index, tenant, phase, ws, seconds)
+_BOOKINGS = st.lists(
+    st.tuples(st.integers(min_value=0, max_value=3),
+              st.sampled_from(["teamA", "teamB", "teamC"]),
+              st.sampled_from(["prefill", "decode"]),
+              st.floats(min_value=0.0, max_value=1e3,
+                        allow_nan=False, allow_infinity=False),
+              st.floats(min_value=1e-4, max_value=10.0,
+                        allow_nan=False, allow_infinity=False)),
+    min_size=1, max_size=24)
+
+
+@settings(max_examples=50, deadline=None)
+@given(bookings=_BOOKINGS)
+def test_merging_per_node_ledgers_conserves_every_cut(bookings):
+    """Per-node ledgers merged into one fleet ledger conserve total_ws,
+    total_seconds, and every rollup cut (node / tenant / phase)."""
+    from repro.telemetry import EnergyLedger
+    per_node: dict = {}
+    for idx, tenant, phase, ws, seconds in bookings:
+        led = per_node.setdefault(f"node{idx}", EnergyLedger())
+        led.add(phase, ws, seconds, node=f"node{idx}", tenant=tenant)
+    fleet = EnergyLedger()
+    for led in per_node.values():
+        fleet.merge(led)
+    want_ws = sum(led.total_ws for led in per_node.values())
+    want_s = sum(led.total_seconds for led in per_node.values())
+    assert fleet.total_ws == pytest.approx(want_ws, rel=1e-9, abs=1e-12)
+    assert fleet.total_seconds == pytest.approx(want_s, rel=1e-9,
+                                                abs=1e-12)
+    for by in ("node", "tenant", "phase"):
+        roll = fleet.rollup(by)
+        assert sum(pe.ws for pe in roll.values()) == \
+            pytest.approx(want_ws, rel=1e-9, abs=1e-12), by
+        assert sum(pe.seconds for pe in roll.values()) == \
+            pytest.approx(want_s, rel=1e-9, abs=1e-12), by
+    node_cut = fleet.rollup("node")
+    for name, led in per_node.items():
+        assert node_cut[name].ws == pytest.approx(led.total_ws, rel=1e-9,
+                                                  abs=1e-12)
+
+
+# fleet serving scenarios: node watt levels + a (tenant, max_new) stream
+_FLEET_STREAM = st.tuples(
+    st.lists(st.floats(min_value=50.0, max_value=500.0),
+             min_size=2, max_size=4),                       # node watts
+    st.lists(st.tuples(st.integers(min_value=0, max_value=2),
+                       st.integers(min_value=1, max_value=8)),
+             min_size=1, max_size=12))                      # request stream
+
+
+@settings(max_examples=25, deadline=None)
+@given(scenario=_FLEET_STREAM)
+def test_router_books_energy_only_to_serving_nodes(scenario):
+    """Whatever the watt levels and stream shape, a node that served zero
+    requests books zero Ws — in its own meter and in the fleet ledger —
+    and the fleet ledger conserves the meters' joules."""
+    from fleet_sim import sim_node
+    from repro.fleet import FleetScheduler
+    from repro.serve.engine import Request
+    import numpy as np
+    watts, stream = scenario
+    nodes = [sim_node(f"n{i}", w) for i, w in enumerate(watts)]
+    sched = FleetScheduler(nodes)
+    for rid, (tenant_i, max_new) in enumerate(stream):
+        sched.submit(Request(rid=rid, prompt=np.zeros(2, np.int32),
+                             max_new=max_new, tenant=f"t{tenant_i}"))
+        sched.step()
+    sched.run()
+    node_cut = sched.ledger.rollup("node")
+    for node in nodes:
+        if not node.served:
+            assert node.meter.ledger.total_ws == 0.0
+            assert node.name not in node_cut
+    assert sched.ledger.total_ws == pytest.approx(
+        sum(n.meter.ledger.total_ws for n in nodes), rel=1e-9, abs=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(scenario=_FLEET_STREAM,
+       budget_ws=st.floats(min_value=0.0, max_value=5.0))
+def test_admission_rejections_book_zero_ws(scenario, budget_ws):
+    """A budgeted tenant's booked Ws never reflects rejected submits:
+    re-running only its admitted requests books the same joules, and a
+    zero budget means zero Ws ever booked."""
+    from fleet_sim import sim_node
+    from repro.fleet import AdmissionController, FleetScheduler
+    from repro.serve.engine import Request
+    from repro.telemetry import WsBudget
+    import numpy as np
+    watts, stream = scenario
+    admission = AdmissionController(
+        {"t0": WsBudget(budget_ws=budget_ws)})
+    nodes = [sim_node(f"n{i}", w) for i, w in enumerate(watts)]
+    sched = FleetScheduler(nodes, admission=admission)
+    admitted = []
+    for rid, (tenant_i, max_new) in enumerate(stream):
+        req = Request(rid=rid, prompt=np.zeros(2, np.int32),
+                      max_new=max_new, tenant=f"t{tenant_i}")
+        if sched.submit(req) is not None:
+            admitted.append(req)
+        sched.step()
+    sched.run()
+    rejected_rids = {r.rid for r in admission.rejections}
+    assert rejected_rids.isdisjoint({r.rid for r in admitted})
+    # rejected requests never reached a loop
+    for node in nodes:
+        for req in node.served:
+            assert req.rid not in rejected_rids
+    booked = WsBudget.tenant_ws(sched.ledger, "t0")
+    attributed = sum(r.energy_ws for r in admitted if r.tenant == "t0")
+    assert booked == pytest.approx(attributed, rel=1e-9, abs=1e-12)
+    if budget_ws == 0.0:
+        assert booked == 0.0
