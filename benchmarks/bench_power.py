@@ -41,7 +41,20 @@ Six workloads through one ``WsComparison`` pipeline:
                       tenant throttled by its Ws admission budget.  The
                       report appends the merged fleet ledger's per-node /
                       per-tenant rollup table and the admission summary
-                      (throttled submits book zero Ws).
+                      (throttled submits book zero Ws);
+  * ``placement_tiny``
+                    — the power-placement A/B: the same bursty diurnal
+                      arrival script (burst, long trough, burst) over a
+                      three-node fleet, served once with every node
+                      always powered (idle floors booked first-class)
+                      and once under the consolidate-and-gate planner
+                      (``repro.fleet.power``): spare nodes gate to a
+                      parked near-zero draw during the trough and
+                      re-admit through boot + canary on the next burst.
+                      The Ws table carries the new ``idle``/
+                      ``transition`` phases, and the report appends each
+                      arm's placement summary (power states, queue-depth
+                      SLO held).
 
 ``run()`` also leaves the structured comparisons in ``LAST_REPORT`` so the
 harness's ``--json-out`` can persist the numbers as a machine-readable
@@ -60,8 +73,9 @@ from repro.configs import get_config
 from repro.core.backends import ReplayBackend
 from repro.core.power import R740_ARRIA10
 from repro.core.verifier import Verifier
-from repro.fleet import (AdmissionController, FleetPolicy, FleetScheduler,
-                         Node)
+from repro.fleet import (AdmissionController, FleetPolicy, FleetPowerPlanner,
+                         FleetScheduler, Node, PowerPlanPolicy,
+                         PowerStatePolicy)
 from repro.kernels import ref
 from repro.models.model import Model
 from repro.serve.engine import Request, ServeLoop
@@ -270,6 +284,64 @@ def _fleet_comparison():
     return cmp_, extra, doc
 
 
+def _placement_serve(mode: str):
+    """The bursty diurnal script over a 3-node fleet: a morning burst,
+    a long trough, an evening burst — served under the given placement
+    mode (``always_on`` books every idle floor; ``gate`` consolidates)."""
+    cfg = get_config("tiny-test")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tick = 0.004
+    env = node_envelope(R740_ARRIA10, accelerated=True)
+    nodes = [Node.build(f"pod{i}", model, params, slots=2, max_seq=64,
+                        eos_id=-1, envelope=env, clock=TickClock(tick),
+                        nominal_step_s=tick)
+             for i in range(3)]
+    planner = FleetPowerPlanner(policy=PowerPlanPolicy(
+        mode=mode, slo_queue_depth=4.0, plan_every=4, min_active=1,
+        min_active_steps=20, horizon_steps=32.0,
+        states=PowerStatePolicy(gate_watts=3.0, boot_energy_ws=2.0,
+                                warmup_steps=4, cooldown_steps=8)))
+    sched = FleetScheduler(
+        nodes,
+        policy=FleetPolicy(flush_every=4, checkpoint_every=8,
+                           migrate_on_drift=False),
+        planner=planner)
+    rng = np.random.default_rng(0)
+    arrivals, rid = [], 0
+    for due in list(range(1, 9)) + list(range(160, 196, 3)):
+        prompt = rng.integers(2, cfg.vocab_size, size=5).astype(np.int32)
+        arrivals.append((due, Request(rid=rid, prompt=prompt, max_new=8,
+                                      tenant=f"team{rid % 2}")))
+        rid += 1
+    finished = sched.run(arrivals=arrivals, max_steps=2000)
+    return sched, finished
+
+
+def _placement_comparison():
+    """Always-on vs consolidate-and-gate over the same diurnal script."""
+    sched_on, fin_on = _placement_serve("always_on")
+    sched_gate, fin_gate = _placement_serve("gate")
+    cmp_ = compare(
+        _fleet_run_energy("always_on(fleet)", sched_on, fin_on),
+        _fleet_run_energy("consolidate_gate(fleet)", sched_gate,
+                          fin_gate),
+        workload="placement_tiny")
+    extra = list(render_rollups(sched_gate.ledger,
+                                label="placement_tiny[consolidate_gate]"))
+    for label, sched in (("always_on", sched_on), ("gate", sched_gate)):
+        p = sched.planner.summary()
+        events = [(e["step"], e["node"], e["action"]) for e in p["events"]]
+        extra.append(
+            f"placement[{label}]: states={p['states']} "
+            f"max_queue_depth={p['max_queue_depth']} "
+            f"(SLO {p['slo_queue_depth']:g}) events={events}")
+    doc = cmp_.to_dict()
+    doc["placement"] = {"always_on": sched_on.summary(),
+                        "gate": sched_gate.summary()}
+    return cmp_, extra, doc
+
+
 def run() -> list[str]:
     lines: list[str] = []
     t0 = time.time()
@@ -284,14 +356,19 @@ def run() -> list[str]:
     ]
     fleet_cmp, fleet_extra, fleet_doc = _fleet_comparison()
     comparisons.append(fleet_cmp)
+    place_cmp, place_extra, place_doc = _placement_comparison()
+    comparisons.append(place_cmp)
     LAST_REPORT.clear()
-    LAST_REPORT.extend(c.to_dict() for c in comparisons[:-1])
+    LAST_REPORT.extend(c.to_dict() for c in comparisons[:-2])
     LAST_REPORT.append(fleet_doc)
+    LAST_REPORT.append(place_doc)
     for cmp_ in comparisons:
         lines.extend(render_comparison_csv(cmp_))
         lines.extend(render_comparison_text(cmp_))
         if cmp_ is fleet_cmp:
             lines.extend(fleet_extra)
+        if cmp_ is place_cmp:
+            lines.extend(place_extra)
         lines.append("")
     lines.append(f"# {len(comparisons)} Ws comparisons "
                  f"in {time.time()-t0:.1f}s")

@@ -15,8 +15,12 @@ them.  ``--ledger`` renders a persisted EnergyLedger (the governed
 serving loop's ``--ledger-out``) as node / tenant / phase rollups — the
 fleet view and the per-tenant energy bill; repeat it to merge per-node
 ledgers into one fleet rollup (``EnergyLedger.merge`` conserves every
-cut).  Imports only ``repro.telemetry`` — no jax — so it can run on a
-machine that just holds the logs.
+cut).  Ledgers written under the fleet power planner carry the
+first-class ``idle`` / ``transition`` phases (floor watts of powered
+idle nodes, parked draw of gated ones, boot energy of wakes) billed to
+the infra tenant — they render here like any other phase row and still
+sum into ``total_ws``.  Imports only ``repro.telemetry`` — no jax — so
+it can run on a machine that just holds the logs.
 """
 import argparse
 import json

@@ -294,6 +294,12 @@ class CompiledBackend:
 
     interval: float = 0.05              # the IPMI poll cadence analogue
     envelope: Optional[PowerEnvelope] = None   # verification node envelope
+    # stage name -> envelope that stage samples through.  The dry-run's
+    # stages (build/lower/compile/analyze) are CPU work on the
+    # verification host and fall back to ``envelope`` (the CPU-active
+    # node point); an ``execute`` stage in the sidecar — a trial that
+    # actually ran the step — draws the accelerator-active point instead.
+    stage_envelopes: Optional[dict] = None
     art_dir: Path = ART_DRYRUN
     multi_pod: bool = False             # lower on the 2-pod production mesh
     record_trace: bool = True
@@ -306,6 +312,9 @@ class CompiledBackend:
             # the dry-run executes on the verification host (a CPU node),
             # so its draw is the paper's measured CPU-node operating points
             self.envelope = node_envelope(R740_ARRIA10, accelerated=False)
+        if self.stage_envelopes is None:
+            self.stage_envelopes = {
+                "execute": node_envelope(R740_ARRIA10, accelerated=True)}
         self.art_dir = Path(self.art_dir)
 
     @property
@@ -385,6 +394,7 @@ class CompiledBackend:
                 f"{ctx.power.hw.hbm_bytes/2**30:.0f} GiB", ctx.power)
         trace = sample_stage_trace(
             stages, self.envelope, chips=1, interval=self.interval,
+            stage_envelopes=self.stage_envelopes,
             meta={"source": self.name, "arch": ctx.cfg.name,
                   "shape": ctx.shape_name, "mesh": rec.get("mesh", ""),
                   "plan": rec.get("plan", "")})

@@ -19,11 +19,21 @@ for one call; ``backends`` overrides a rung's backend instance (tests
 inject stubs or replay recordings there).  Everything expensive about a
 rung lives in its backend — the Verifier itself only caches, counts
 trials, and routes.
+
+Cached *penalties* are not forever: a compiled-rung trial can fail
+transiently (subprocess blip, timeout on a loaded host), and a penalty
+cached for the verifier's lifetime would permanently skew every consumer
+that re-reads it — most visibly the governor's migration gate, which
+re-judges the same (plan, rung) pair at every checkpoint.  ``PenaltyPolicy``
+gives such penalties a retry budget and an optional wall-clock TTL;
+analytic penalties (OOM, bad plan) are deterministic and stay cached —
+retrying them only burns trials.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
 from repro.configs.base import ArchConfig, PlanConfig, SHAPES
 from repro.core.backends import (ART_DRYRUN, MeasureContext,  # noqa: F401
@@ -59,6 +69,28 @@ class RungPolicy:
 PRODUCTION_RUNGS = RungPolicy(finalist="compiled")
 
 
+@dataclass(frozen=True)
+class PenaltyPolicy:
+    """Lifetime of a cached penalty ``Measurement``.
+
+    A penalty on one of ``rungs`` is re-measured on a later cache lookup
+    while its ``retries`` budget lasts; once the budget is spent it stays
+    cached — unless ``ttl_s`` is set, in which case the penalty also
+    expires after that many wall-clock seconds (without consuming the
+    budget), so a long-lived verifier eventually re-tests a plan whose
+    environment may have healed.  Rungs outside ``rungs`` (the analytic
+    estimate) keep today's measure-once behaviour: their penalties are
+    deterministic, and the GA's trial accounting
+    (``n_trials == len(cache)``) depends on it.
+    """
+    retries: int = 1
+    ttl_s: float = 0.0          # 0 = no time-based expiry
+    rungs: tuple = ("compiled", "replay")
+
+    def applies(self, rung: str) -> bool:
+        return rung in self.rungs
+
+
 @dataclass
 class Verifier:
     cfg: ArchConfig
@@ -73,6 +105,10 @@ class Verifier:
     n_trials: int = 0                   # actual (non-cache) measurements
     rungs: RungPolicy = field(default_factory=RungPolicy)
     backends: dict = field(default_factory=dict)   # rung -> backend override
+    penalties: PenaltyPolicy = field(default_factory=PenaltyPolicy)
+    clock: Callable[[], float] = time.monotonic    # TTL time base
+    # (plan, rung) key -> (retries left, clock stamp of the last penalty)
+    _penalty_meta: dict = field(default_factory=dict)
 
     @property
     def shape(self):
@@ -95,13 +131,38 @@ class Verifier:
             self.backends[rung] = make_backend(rung)
         return self.backends[rung]
 
+    def _penalty_expired(self, key: tuple, rung: str,
+                         m: Measurement) -> bool:
+        """True when a cached penalty should be re-measured."""
+        if m.ok or not self.penalties.applies(rung):
+            return False
+        left, stamp = self._penalty_meta.get(
+            key, (self.penalties.retries, self.clock()))
+        if left > 0:
+            return True
+        return self.penalties.ttl_s > 0 \
+            and self.clock() - stamp >= self.penalties.ttl_s
+
     def _measure_cached(self, key: tuple, rung: str,
                         plan: PlanConfig) -> Measurement:
-        if key in self.cache:
-            return self.cache[key]
+        cached = self.cache.get(key)
+        if cached is not None and not self._penalty_expired(key, rung,
+                                                            cached):
+            return cached
         self.n_trials += 1
         m = self.backend(rung).measure(self.context, plan)
         self.cache[key] = m
+        if m.ok:
+            self._penalty_meta.pop(key, None)
+        elif self.penalties.applies(rung):
+            if cached is not None and not cached.ok:
+                # a retry that failed again consumes one from the budget
+                left, _ = self._penalty_meta.get(
+                    key, (self.penalties.retries, 0.0))
+                self._penalty_meta[key] = (max(left - 1, 0), self.clock())
+            else:
+                self._penalty_meta[key] = (self.penalties.retries,
+                                           self.clock())
         return m
 
     def measure(self, genome: PlanGenome,

@@ -12,13 +12,23 @@ runs three policies on the merged fleet ``EnergyLedger``:
   * cross-node load migration — a drifted node's queue and active slots
     drain to healthy nodes at a checkpoint boundary (``FleetEvent``);
   * tenant admission control — ``AdmissionController`` throttles submits
-    against per-tenant ``WsBudget`` windows read off the fleet ledger.
+    against per-tenant ``WsBudget`` windows read off the fleet ledger;
+  * fleet power placement (``repro.fleet.power``) — a
+    ``FleetPowerPlanner`` decides which nodes are powered at all:
+    arrival forecasting (EWMA + M/M/c), consolidate-and-gate placement
+    at checkpoint boundaries, probe-based canary re-admission, with
+    idle/transition energy booked first-class through the node meters.
 
-``repro.launch.serve --fleet N`` wires it on the CLI; the ``fleet_tiny``
-benchmark workload A/Bs the energy-aware router against round-robin.
+``repro.launch.serve --fleet N`` wires it on the CLI (``--placement``
+for the power planner); the ``fleet_tiny`` and ``placement_tiny``
+benchmark workloads A/B the router and placement policies.
 """
 from repro.fleet.admission import (AdmissionController,  # noqa: F401
                                    AdmissionRejection)
 from repro.fleet.node import Node  # noqa: F401
+from repro.fleet.power import (ArrivalForecaster,  # noqa: F401
+                               FleetPowerPlanner, NodePowerState,
+                               PlacementEvent, PowerPlanPolicy,
+                               PowerStatePolicy)
 from repro.fleet.scheduler import (FleetEvent, FleetPolicy,  # noqa: F401
                                    FleetScheduler)

@@ -1,0 +1,30 @@
+"""repro.fleet.power — the fleet power planner.
+
+The placement layer beside the ``FleetScheduler``: where the scheduler
+decides *where a request runs*, this package decides *which nodes are
+powered at all* — the paper's idle-draw lever at fleet scale.
+
+  * ``NodePowerState`` — per-node active/parked/gated/waking/probation
+    machine with transition costs, booked into the node's own meter as
+    first-class ``idle``/``transition`` phases (every ledger rollup
+    still sums to ``total_ws``);
+  * ``ArrivalForecaster`` — EWMA arrival-rate estimate + M/M/c expected
+    queue depth: the sustained-load price the one-step-ahead router
+    cannot see;
+  * ``FleetPowerPlanner`` — consolidate-and-gate: the minimal node set
+    meeting the queue-depth SLO at lowest forecast Ws, applied as
+    ``PlacementEvent``s at checkpoint boundaries, with probe-based
+    canary re-admission for gated and drained nodes.
+
+``repro.launch.serve --placement gate|always_on --slo-queue-depth N``
+wires it on the CLI; the ``placement_tiny`` benchmark workload A/Bs
+consolidate-and-gate against always-on under a bursty diurnal arrival
+script.
+"""
+from repro.fleet.power.forecast import ArrivalForecaster  # noqa: F401
+from repro.fleet.power.planner import (MODES,  # noqa: F401
+                                       FleetPowerPlanner, PlacementEvent,
+                                       PowerPlanPolicy)
+from repro.fleet.power.states import (ACTIVE, GATED, PARKED,  # noqa: F401
+                                      PROBATION, STATES, WAKING,
+                                      NodePowerState, PowerStatePolicy)

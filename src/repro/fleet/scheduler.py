@@ -21,6 +21,15 @@ policies run on the merged fleet ``EnergyLedger``:
     submits against its ``WsBudget`` window read off the fleet ledger;
     throttled submits book zero Ws.
 
+A fourth, optional policy layer is *placement* (``repro.fleet.power``):
+attach a ``FleetPowerPlanner`` and the scheduler also decides which nodes
+are powered at all — powered-but-unloaded nodes book floor-watts ``idle``
+energy every step (the envelope integral the paper's verdict counts),
+gated nodes drop to a parked near-zero draw, and gate/wake
+``PlacementEvent``s apply at the same checkpoint boundaries as
+migrations.  Probation nodes re-admit through a single canary request the
+router hands them.
+
 Flushes use the same ``drain_delta`` primitive as the governor, so the
 merged fleet ledger's ``total_ws`` equals the sum of the node meters'
 totals at every run end — per-node, per-tenant and per-phase cuts of the
@@ -98,6 +107,7 @@ class FleetScheduler:
     nodes: list
     policy: FleetPolicy = field(default_factory=FleetPolicy)
     admission: Optional[AdmissionController] = None
+    planner: Optional[object] = None    # repro.fleet.power.FleetPowerPlanner
     ledger: EnergyLedger = field(default_factory=EnergyLedger)
     events: list = field(default_factory=list)      # FleetEvent log
     steps: int = 0
@@ -121,6 +131,8 @@ class FleetScheduler:
         self._pending: dict = {}            # node name -> _PendingDrain
         self._cooldown_until = {n: 0 for n in names}
         self._rr = 0
+        if self.planner is not None:
+            self.planner.bind(self)
 
     def node(self, name: str) -> Node:
         return self._by_name[name]
@@ -138,8 +150,22 @@ class FleetScheduler:
         """Pick the destination node for one request (no admission check —
         ``submit`` is the admission-controlled entry).  ``exclude`` bars
         one node from candidacy — the checkpoint drain uses it so a
-        drained-but-unparked node cannot be handed its own load back."""
+        drained-but-unparked node cannot be handed its own load back.
+
+        With a power planner attached, a probation node still owed its
+        canary takes the request (the probe that re-admits it), and
+        other non-ACTIVE nodes are not candidates — unless no ACTIVE
+        node is left at all, in which case the warm probation nodes
+        take the load (serving beats the probe protocol: a drain or a
+        burst must never crash on an all-probation fleet)."""
         candidates = [n for n in self.healthy() if n is not exclude]
+        if self.planner is not None and candidates:
+            canary = self.planner.canary_target(candidates)
+            if canary is not None:
+                self.planner.note_canary(canary, req, self.steps)
+                return canary
+            candidates = [n for n in candidates
+                          if self.planner.routable(n)] or candidates
         if not candidates:
             raise RuntimeError("no healthy node to route to (all parked)")
         if self.policy.router == "round_robin":
@@ -160,6 +186,8 @@ class FleetScheduler:
         drained into the fleet ledger first (``flush(govern=False)``), so
         a tenant cannot overshoot its budget by however much energy the
         flush cadence had not yet booked."""
+        if self.planner is not None:
+            self.planner.observe_arrival(self.steps)
         if self.admission is not None:
             self.flush(govern=False)
             if not self.admission.admit(req, self.steps, self.ledger):
@@ -217,7 +245,12 @@ class FleetScheduler:
         """Apply every pending drain: park the sick node, evict its queue
         and slots, re-route the load to healthy nodes, emit one
         ``FleetEvent`` per drained node.  A drain with nowhere to go
-        (no other healthy node) is dropped — serving beats purity."""
+        (no other healthy node) is dropped — serving beats purity.
+
+        Pending power placements (gate/wake) apply at the same boundary
+        — their ``PlacementEvent``s live on ``planner.events``."""
+        if self.planner is not None:
+            self.planner.checkpoint(self.steps)
         if not self._pending:
             return []
         parked, self._pending = self._pending, {}
@@ -253,11 +286,21 @@ class FleetScheduler:
     def step(self) -> list:
         """One fleet step: every node with work decodes once, then the
         flush / checkpoint cadences apply.  Returns the ``FleetEvent``s
-        this step's checkpoint emitted (usually [])."""
+        this step's checkpoint emitted (usually []).
+
+        With a power planner attached, powered-but-unloaded nodes step
+        too — booking their floor-watts ``idle`` window — and the
+        planner's tick books gated/parked draws and runs the probe
+        policy, so the fleet ledger carries the whole envelope integral,
+        not just the busy spans."""
         self.steps += 1
         for node in self.nodes:
             if node.has_work:
                 node.loop.step()
+            elif self.planner is not None and not node.parked:
+                node.loop.step()        # idle tick: floor watts booked
+        if self.planner is not None:
+            self.planner.tick(self.steps)
         if self.steps % self.policy.flush_every == 0:
             self.flush()
         if self.steps % self.policy.checkpoint_every == 0:
@@ -274,13 +317,22 @@ class FleetScheduler:
         serving — one submit every ``arrival_every`` fleet steps — which
         is what makes budget throttling observable (a tenant's spend is
         zero until its traffic runs).  Rejected arrivals are dropped with
-        zero Ws booked; the caller reads ``admission.rejections``."""
+        zero Ws booked; the caller reads ``admission.rejections``.
+
+        An arrival may also be a ``(due_step, Request)`` pair: it is
+        submitted at the first fleet step >= ``due_step``, which is how
+        a bursty/diurnal script leaves real *troughs* — the fleet keeps
+        stepping (booking idle floors, letting the power planner gate)
+        while no request is due."""
         queue = list(arrivals) if arrivals else []
         n0 = {n.name: len(n.loop.finished) for n in self.nodes}
         for _ in range(max_steps):
             if not queue and not self.has_work:
                 break
-            if queue and self.steps % max(arrival_every, 1) == 0:
+            if queue and isinstance(queue[0], tuple):
+                while queue and queue[0][0] <= self.steps:
+                    self.submit(queue.pop(0)[1])
+            elif queue and self.steps % max(arrival_every, 1) == 0:
                 self.submit(queue.pop(0))
             self.step()
         self.flush(govern=False)            # complete the fleet ledger
@@ -303,4 +355,6 @@ class FleetScheduler:
                "events": [e.to_dict() for e in self.events]}
         if self.admission is not None:
             doc["admission"] = self.admission.summary(self.ledger)
+        if self.planner is not None:
+            doc["placement"] = self.planner.summary()
         return doc

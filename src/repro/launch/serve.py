@@ -18,9 +18,16 @@ baseline), a drifted node's load drains to healthy nodes at a checkpoint
 boundary (``FleetEvent``), and ``--admission tenant=Ws[,t=Ws]`` throttles
 submits against per-tenant budget windows on the merged fleet ledger.
 With ``--govern`` each node additionally gets its own PowerGovernor, so
-plan migrations keep working underneath the fleet plane.  The persisted
-ledger re-renders offline via ``scripts/power_report.py --ledger`` (pass
-it repeatedly to merge fleets).
+plan migrations keep working underneath the fleet plane.  With
+``--placement gate`` the fleet power planner
+(``repro.fleet.power``) additionally decides which nodes are powered at
+all: idle nodes book their floor watts, consolidation gates spare nodes
+to a parked draw at checkpoint boundaries, and gated/drained nodes
+re-admit through a canary request (``--placement always_on`` keeps every
+node powered — the A/B baseline; ``--slo-queue-depth`` is the queue SLO
+the planner must hold).  The persisted ledger re-renders offline via
+``scripts/power_report.py --ledger`` (pass it repeatedly to merge
+fleets).
 """
 from __future__ import annotations
 
@@ -33,8 +40,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.adapt import ReconfigPolicy, Reconfigurator
 from repro.core.ga import GAConfig
-from repro.fleet import (AdmissionController, FleetPolicy, FleetScheduler,
-                         Node)
+from repro.fleet import (AdmissionController, FleetPolicy, FleetPowerPlanner,
+                         FleetScheduler, Node, PowerPlanPolicy)
 from repro.models.model import Model
 from repro.serve.engine import Request
 from repro.telemetry import (GovernorPolicy, PowerGovernor, WsBudget,
@@ -99,6 +106,15 @@ def main() -> None:
                          "make admission throttling observable")
     ap.add_argument("--no-drain", action="store_true",
                     help="disable cross-node load migration on drift")
+    ap.add_argument("--placement", default=None,
+                    choices=("gate", "always_on"),
+                    help="attach the fleet power planner: consolidate-and-"
+                         "gate idle nodes to a parked draw (gate), or keep "
+                         "every node powered but book its idle floor "
+                         "(always_on, the A/B baseline)")
+    ap.add_argument("--slo-queue-depth", type=float, default=4.0,
+                    help="expected queued requests the placement planner "
+                         "must keep the active node set under")
     ap.add_argument("--govern", action="store_true",
                     help="attach a per-node PowerGovernor (Step-7 loop)")
     ap.add_argument("--flush-every", type=int, default=8,
@@ -131,13 +147,17 @@ def main() -> None:
     if args.admission:
         admission = AdmissionController(
             parse_budgets(args.admission, args.admission_window))
+    planner = None
+    if args.placement:
+        planner = FleetPowerPlanner(policy=PowerPlanPolicy(
+            mode=args.placement, slo_queue_depth=args.slo_queue_depth))
     sched = FleetScheduler(
         nodes,
         policy=FleetPolicy(flush_every=args.flush_every,
                            checkpoint_every=args.checkpoint_every,
                            router=args.router,
                            migrate_on_drift=not args.no_drain),
-        admission=admission)
+        admission=admission, planner=planner)
 
     tenants = [t.strip() for t in args.tenants.split(",") if t.strip()] \
         or ["default"]
@@ -187,6 +207,15 @@ def main() -> None:
         print(f"fleet drain @step {ev.step} (detected {ev.detected_step}): "
               f"{ev.node} drift {ev.drift_ratio:.2f}x -> "
               f"{len(ev.moved_rids)} requests to {','.join(ev.targets)}")
+    if planner is not None:
+        for ev in planner.events:
+            print(f"placement {ev.action} @step {ev.step}: {ev.node} "
+                  f"(rate={ev.rate:.3f}/step, "
+                  f"Lq={ev.queue_depth_est:.2f}, "
+                  f"keep {ev.active_target} nodes) {ev.reason}")
+        print(f"placement[{args.placement}]: states={planner.states} "
+              f"max_queue_depth={planner.max_queue_depth} "
+              f"(SLO {args.slo_queue_depth:g})")
     if admission is not None:
         for tenant, row in admission.summary(sched.ledger).items():
             print(f"admission {tenant}: spent {row['spent_ws']:.2f}Ws of "

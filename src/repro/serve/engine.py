@@ -43,7 +43,8 @@ import numpy as np
 from repro.models.model import Model
 from repro.parallel.sharding import ShardingRules
 from repro.telemetry.dvfs import LiveUtilization
-from repro.telemetry.energy import DecodeEnergyMeter
+from repro.telemetry.energy import (IDLE_PHASE, INFRA_TENANT,
+                                    DecodeEnergyMeter)
 
 
 def make_prefill(model: Model, rules: Optional[ShardingRules] = None):
@@ -101,6 +102,7 @@ class ServeLoop:
         self.finished: list[Request] = []
         self.plan_migrations: list = []     # (step, new_plan) from governor
         self.steps_done = 0
+        self._t_mark: Optional[float] = None    # last step's clock reading
         self.parked = False                 # a parked loop takes no new work
         # measured slot-occupancy signal: unless the meter already carries
         # a measured utilization, the loop feeds it one — real occupancy
@@ -141,6 +143,11 @@ class ServeLoop:
 
     def unpark(self) -> None:
         self.parked = False
+        # a parked loop was not this meter's responsibility (the fleet
+        # power planner books the parked/gated draw itself): idle
+        # accounting must restart from re-admission, not back-book the
+        # whole parked span at floor watts on top of those bookings
+        self._t_mark = None
 
     def drain(self, include_queue: bool = True) -> list[Request]:
         """Evict the queue and every active slot as resumable requests.
@@ -205,11 +212,43 @@ class ServeLoop:
                  "pos": jnp.asarray(pos, jnp.int32)}
         _, self.cache = self._decode(self.params, batch, self.cache)
 
+    def _idle_step(self) -> int:
+        """A step with no work still burns the envelope floor: book the
+        time since the previous step's last clock reading as ``idle``
+        Watt*seconds at zero utilization (the DVFS gated floor), billed
+        to the infra tenant — so a fleet that keeps this node powered
+        sees its draw in the ledger and the meter totals match the
+        envelope integral.  Under a virtual ``TickClock`` the window is
+        exactly one tick; under a wall clock it is the real silence
+        since the node last did (or idled) anything — two back-to-back
+        reads would book nothing there."""
+        if self.meter is not None:
+            now = self.clock()
+            if self._t_mark is None:        # first-ever step: no history
+                dt = self.clock() - now     # one tick virtual, ~0 wall
+                now += dt
+            else:
+                dt = max(now - self._t_mark, 0.0)
+            self._t_mark = now
+            self._record_util(IDLE_PHASE, dt, 0.0)
+            self.meter.observe(dt, util=0.0, phase=IDLE_PHASE,
+                               tenants=[INFRA_TENANT])
+        self.steps_done += 1
+        if self.governor is not None and self.meter is not None:
+            self.governor.tick(self.meter, self.steps_done, node=self.node)
+        return 0
+
     def step(self) -> int:
-        """One decode step across all active slots. Returns #active."""
+        """One decode step across all active slots. Returns #active.
+
+        With no active slots (empty queue, or parked) the step books
+        floor-watts ``idle`` energy instead of nothing — see
+        ``_idle_step``.  ``run()`` never idles (it exits when the loop
+        has no work); only an external stepper such as the
+        ``FleetScheduler`` holds an unloaded loop powered."""
         self._fill_slots()
         if all(r is None for r in self.active):
-            return 0
+            return self._idle_step()
         participants = [r for r in self.active if r is not None]
         t0 = self.clock()
         pos = int(max(self.pos[i] for i, r in enumerate(self.active)
@@ -223,6 +262,7 @@ class ServeLoop:
             # the measured occupancy (slots that actually decoded this
             # window) drives the envelope through the utilization signal
             dt = self.clock() - t0
+            self._t_mark = t0 + dt      # idle accounting resumes here
             util = len(participants) / self.slots
             self._record_util("decode", dt, util)
             ws = self.meter.observe(dt, util=util, phase="decode",

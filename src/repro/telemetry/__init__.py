@@ -25,9 +25,10 @@ from repro.telemetry.sampler import (ConstantSource,  # noqa: F401
                                      sample_stage_trace,
                                      synthesize_phase_trace)
 from repro.telemetry.energy import (DEFAULT_NODE,  # noqa: F401
-                                    DEFAULT_TENANT, DecodeEnergyMeter,
-                                    EnergyLedger, PhaseEnergy, WsBudget,
-                                    drain_delta)
+                                    DEFAULT_TENANT, IDLE_PHASE,
+                                    INFRA_TENANT, TRANSITION_PHASE,
+                                    DecodeEnergyMeter, EnergyLedger,
+                                    PhaseEnergy, WsBudget, drain_delta)
 from repro.telemetry.compare import (RequestEnergy, RunEnergy,  # noqa: F401
                                      WsComparison, ab_sample, compare)
 from repro.telemetry.governor import (GovernorEvent,  # noqa: F401

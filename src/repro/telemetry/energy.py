@@ -40,6 +40,15 @@ from repro.telemetry.trace import PowerTrace
 
 DEFAULT_NODE = "node0"
 DEFAULT_TENANT = "default"
+#: billing label for energy no request caused — idle floor watts, power
+#: state transitions (boot/warmup).  Booked like any tenant so every
+#: rollup still sums to ``total_ws``, but kept out of real tenants' bills.
+INFRA_TENANT = "fleet"
+#: ledger phases the fleet power planner books (``repro.fleet.power``):
+#: a powered-but-unloaded window draws the envelope floor (``idle``), a
+#: gate/wake transition draws its modeled boot energy (``transition``).
+IDLE_PHASE = "idle"
+TRANSITION_PHASE = "transition"
 
 
 @dataclass
@@ -375,9 +384,16 @@ class DecodeEnergyMeter:
 
     def observe(self, seconds: float, util: float = 1.0,
                 phase: str = "decode",
-                tenants: Optional[list[str]] = None) -> float:
+                tenants: Optional[list[str]] = None,
+                watts: Optional[float] = None) -> float:
+        """Book one measured window.  ``watts`` overrides the derived
+        draw entirely (source and utilization signal both bypassed) —
+        the fleet power planner uses it to book a gated node's parked
+        draw and a wake transition's boot energy, which no envelope
+        point represents."""
         seconds = max(float(seconds), 0.0)
-        w = self.watts_at(self._now + 0.5 * seconds, util)
+        w = max(float(watts), 0.0) if watts is not None \
+            else self.watts_at(self._now + 0.5 * seconds, util)
         ws = w * seconds
         if seconds > 0:
             t1 = self._now + seconds

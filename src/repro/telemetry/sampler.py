@@ -197,7 +197,8 @@ def synthesize_phase_trace(phases: list[tuple[str, float, float]],
 def sample_stage_trace(stages, envelope: PowerEnvelope,
                        chips: int = 1, interval: float = 0.05,
                        maxlen: int = 65536,
-                       meta: Optional[dict] = None) -> PowerTrace:
+                       meta: Optional[dict] = None,
+                       stage_envelopes: Optional[dict] = None) -> PowerTrace:
     """Phase-marked trace sampled over measured wall-clock stage windows.
 
     ``stages`` is the compiled-rung sidecar: ``[{"name", "t0", "t1",
@@ -208,20 +209,31 @@ def sample_stage_trace(stages, envelope: PowerEnvelope,
     integrates exactly.  Unlike ``synthesize_phase_trace`` the watts here
     are not back-solved from an energy estimate — they are the envelope
     evaluated at what the trial actually measured.
+
+    Stages draw different hardware: lowering/compilation is CPU-bound on
+    the verification host, while an execution stage would drive the
+    accelerator point.  ``stage_envelopes`` maps a stage name to the
+    envelope its window samples through; unmapped stages use
+    ``envelope``.  The trace's ``meta["envelopes"]`` records which
+    envelope each stage actually sampled.
     """
     util = PhaseUtilization(stages)
-    source = ModeledSource(envelope, utilization=util, chips=chips)
-    sampler = PowerSampler(source, interval=interval, maxlen=maxlen)
     trace = PowerTrace(maxlen=maxlen, meta=meta)
     t0 = util.t0
+    sampled_envs: dict = {}
     for span in util.spans:
         if span.seconds <= 0:
             continue
+        env = (stage_envelopes or {}).get(span.name, envelope)
+        sampled_envs.setdefault(span.name, env.name)
+        source = ModeledSource(env, utilization=util, chips=chips)
+        sampler = PowerSampler(source, interval=interval, maxlen=maxlen)
         # one run() per stage: both edges get samples, so the inter-stage
         # step is exact under trapezoidal integration
         sampler.run(span.seconds, t0=span.t0, trace=trace)
         trace.mark_phase(span.name, span.t0, span.t1, depth=1)
     trace.mark_phase("trial", t0, util.t1, depth=0)
     trace.meta.setdefault("utilization", util.per_phase())
+    trace.meta.setdefault("envelopes", sampled_envs)
     trace.meta.setdefault("sampled", "wall_clock_stages")
     return trace

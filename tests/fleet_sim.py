@@ -62,6 +62,12 @@ class SimLoop:
                     self.active[i] = self.queue.pop(0)
         participants = [r for r in self.active if r is not None]
         if not participants:
+            # mirror ServeLoop._idle_step: a powered loop with no work
+            # books floor-watts idle Ws under the infra tenant
+            from repro.telemetry import INFRA_TENANT
+            self.meter.observe(self.step_s, util=0.0, phase="idle",
+                               tenants=[INFRA_TENANT])
+            self.steps_done += 1
             return 0
         ws = self.meter.observe(self.step_s,
                                 util=len(participants) / self.slots,
@@ -90,5 +96,18 @@ def sim_node(name: str, watts: float, slots: int = 2,
     from repro.core.power import V5E
     meter = DecodeEnergyMeter(envelope=envelope_for(V5E),
                               source=ConstantSource(watts), node=name)
+    return Node(name=name, loop=SimLoop(slots, meter, step_s=step_s),
+                meter=meter, nominal_step_s=step_s)
+
+
+def sim_envelope_node(name: str, envelope=None, slots: int = 2,
+                      step_s: float = 0.01) -> Node:
+    """A fleet node metered by the DVFS envelope (no source override) —
+    idle steps book the envelope's gated floor, which is what the power
+    planner's consolidate-and-gate A/B is about."""
+    if envelope is None:
+        from repro.core.power import V5E
+        envelope = envelope_for(V5E)
+    meter = DecodeEnergyMeter(envelope=envelope, node=name)
     return Node(name=name, loop=SimLoop(slots, meter, step_s=step_s),
                 meter=meter, nominal_step_s=step_s)

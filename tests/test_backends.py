@@ -352,3 +352,110 @@ def test_confirms_preference_rules():
     assert confirms_preference(ok_slow, bad)           # incumbent failed
     # slack: an equal pair is confirmed, not vetoed by jitter
     assert confirms_preference(ok_fast, ok_fast)
+
+
+# ---------------------------------------------------------------------------
+# Penalty retry policy (transient compiled-rung failures must heal)
+# ---------------------------------------------------------------------------
+
+class _FlakyRung:
+    """Fails the first ``fail_n`` trials, then succeeds — a transient
+    subprocess blip on the verification machine."""
+
+    name = "compiled"
+
+    def __init__(self, fail_n):
+        self.fail_n = fail_n
+        self.calls = 0
+
+    def measure(self, ctx, plan):
+        self.calls += 1
+        if self.calls <= self.fail_n:
+            return penalty_measurement("stub: transient blip", ctx.power)
+        return Measurement(seconds=1.0, watts=100.0, energy_j=100.0,
+                           source="compiled")
+
+
+def test_penalty_retry_heals_transient_compiled_failure():
+    cfg = get_config("tiny-test")
+    flaky = _FlakyRung(fail_n=1)
+    v = Verifier(cfg, "decode_32k", backends={"compiled": flaky})
+    m1 = v.measure_plan(cfg.plan, rung="compiled")
+    assert not m1.ok                            # the blip penalized
+    # the next lookup spends the retry budget and heals the cache
+    m2 = v.measure_plan(cfg.plan, rung="compiled")
+    assert m2.ok and flaky.calls == 2
+    # healed results cache normally again
+    m3 = v.measure_plan(cfg.plan, rung="compiled")
+    assert m3 is m2 and flaky.calls == 2
+
+
+def test_penalty_retry_budget_exhausts_for_persistent_failures():
+    cfg = get_config("tiny-test")
+    flaky = _FlakyRung(fail_n=10_000)           # never heals
+    v = Verifier(cfg, "decode_32k", backends={"compiled": flaky})
+    for _ in range(5):
+        m = v.measure_plan(cfg.plan, rung="compiled")
+        assert not m.ok
+    # first trial + the default single retry, then the penalty sticks
+    assert flaky.calls == 1 + v.penalties.retries
+
+
+def test_penalty_ttl_re_measures_after_expiry():
+    from repro.core.verifier import PenaltyPolicy
+    cfg = get_config("tiny-test")
+    flaky = _FlakyRung(fail_n=2)
+    now = [0.0]
+    v = Verifier(cfg, "decode_32k", backends={"compiled": flaky},
+                 penalties=PenaltyPolicy(retries=1, ttl_s=60.0),
+                 clock=lambda: now[0])
+    assert not v.measure_plan(cfg.plan, rung="compiled").ok   # trial 1
+    assert not v.measure_plan(cfg.plan, rung="compiled").ok   # retry spent
+    # budget exhausted, TTL not yet reached -> stays cached
+    assert v.measure_plan(cfg.plan, rung="compiled").ok is False
+    assert flaky.calls == 2
+    now[0] = 61.0                               # the environment healed
+    assert v.measure_plan(cfg.plan, rung="compiled").ok
+    assert flaky.calls == 3
+
+
+def test_analytic_penalties_stay_cached_once():
+    """Analytic penalties are deterministic (OOM): no retry, and the GA's
+    ``n_trials == len(cache)`` accounting still holds."""
+    from repro.core.plan import PlanGenome
+    cfg = get_config("llama3-405b")
+    v = Verifier(cfg, "train_4k", n_chips=4, mode="analytic")
+    g = PlanGenome.from_plan(cfg, "train", cfg.plan)
+    m1 = v.measure(g)
+    m2 = v.measure(g)
+    assert not m1.ok and m2 is m1
+    assert v.n_trials == len(v.cache) == 1
+
+
+# ---------------------------------------------------------------------------
+# Per-stage envelopes (compile is CPU-bound; execute draws the accelerator)
+# ---------------------------------------------------------------------------
+
+def test_compiled_rung_samples_per_stage_envelopes():
+    from repro.core.power import R740_ARRIA10
+    from repro.telemetry import node_envelope
+    backend = CompiledBackend(record_trace=False, interval=0.01)
+    cpu = node_envelope(R740_ARRIA10, accelerated=False)
+    accel = node_envelope(R740_ARRIA10, accelerated=True)
+    # the defaults: compile-pipeline stages fall back to the CPU point,
+    # an execute stage draws the accelerator point
+    assert backend.envelope.name == cpu.name
+    assert backend.stage_envelopes["execute"].name == accel.name
+    m = backend.measurement_from_trial(
+        _ctx(), _OK_REC, _stages(("compile", 1.0, 1.0),
+                                 ("execute", 2.0, 1.0)))
+    assert m.ok
+    tr = m.trace
+    assert tr.phase_stats("compile")["avg_w"] == \
+        pytest.approx(cpu.watts(1.0), rel=1e-9)
+    assert tr.phase_stats("execute")["avg_w"] == \
+        pytest.approx(accel.watts(1.0), rel=1e-9)
+    assert tr.meta["envelopes"] == {"compile": cpu.name,
+                                    "execute": accel.name}
+    # the rung invariant survives the per-stage envelopes
+    assert m.energy_j == pytest.approx(tr.integrate(), rel=1e-12)

@@ -1,0 +1,310 @@
+"""Fleet power planner: node power states, forecasting, consolidate-and-gate.
+
+The acceptance loop for ``repro.fleet.power``: under a bursty diurnal
+arrival script the planner gates spare nodes to a parked draw at a
+checkpoint boundary, re-admits them through boot + canary on the next
+burst, books the new ``idle``/``transition`` phases first-class (every
+ledger rollup still sums to ``total_ws``, the merged fleet ledger still
+equals the sum of the node meters), and holds the queue-depth SLO.
+"""
+import numpy as np
+import pytest
+
+from fleet_sim import sim_envelope_node
+from repro.configs import get_config
+from repro.fleet import (ArrivalForecaster, FleetPolicy, FleetPowerPlanner,
+                         FleetScheduler, Node, PowerPlanPolicy,
+                         PowerStatePolicy)
+from repro.fleet.power.states import ACTIVE, GATED, PROBATION
+from repro.serve.engine import Request
+from repro.telemetry import (IDLE_PHASE, INFRA_TENANT, TRANSITION_PHASE,
+                             TickClock)
+
+TICK = 0.01
+
+
+def _req(rid, tenant="default", max_new=6, prompt_len=3):
+    return Request(rid=rid, prompt=np.full(prompt_len, 2, np.int32),
+                   max_new=max_new, tenant=tenant)
+
+
+def _planner(mode="gate", **kw):
+    states = kw.pop("states", PowerStatePolicy(
+        gate_watts=2.0, boot_energy_ws=1.0, warmup_steps=4,
+        cooldown_steps=8))
+    policy = PowerPlanPolicy(mode=mode, slo_queue_depth=4.0, plan_every=4,
+                             min_active=1, min_active_steps=20,
+                             horizon_steps=32.0, states=states, **kw)
+    return FleetPowerPlanner(policy=policy)
+
+
+def _fleet(n=3, mode="gate", **kw):
+    nodes = [sim_envelope_node(f"n{i}", slots=2, step_s=TICK)
+             for i in range(n)]
+    sched = FleetScheduler(
+        nodes, policy=FleetPolicy(flush_every=4, checkpoint_every=8,
+                                  migrate_on_drift=False),
+        planner=_planner(mode=mode, **kw))
+    return nodes, sched
+
+
+def _diurnal(n_a=8, trough=150, n_b=12, spacing_b=3, max_new=8):
+    """burst A (1/step) -> trough -> burst B; rids are global."""
+    arrivals, rid = [], 0
+    for due in range(1, n_a + 1):
+        arrivals.append((due, _req(rid, tenant=f"t{rid % 2}",
+                                   max_new=max_new)))
+        rid += 1
+    start_b = n_a + 2 + trough
+    for i in range(n_b):
+        arrivals.append((start_b + i * spacing_b,
+                         _req(rid, tenant=f"t{rid % 2}", max_new=max_new)))
+        rid += 1
+    return arrivals
+
+
+# ---------------------------------------------------------------------------
+# ServeLoop / SimLoop idle accounting (the envelope-integral satellite)
+# ---------------------------------------------------------------------------
+
+def test_serve_loop_idle_step_books_floor_watts(rng_key):
+    """A real ServeLoop step with no work books one tick of floor-watts
+    idle Ws under the infra tenant — previously it booked nothing."""
+    from repro.models.model import Model
+    cfg = get_config("tiny-test")
+    model = Model(cfg)
+    node = Node.build("idle0", model, params=model.init(rng_key), slots=2,
+                      max_seq=32, clock=TickClock(TICK))
+    assert node.meter.ledger.total_ws == 0.0
+    assert node.loop.step() == 0            # no work -> idle tick
+    env = node.meter.envelope
+    pe = node.meter.ledger.phases[IDLE_PHASE]
+    assert pe.ws == pytest.approx(env.gated_idle * TICK, rel=1e-9)
+    assert pe.seconds == pytest.approx(TICK)
+    cell = node.meter.ledger.rollup("tenant")[INFRA_TENANT]
+    assert cell.ws == pytest.approx(pe.ws, rel=1e-12)
+    # the idle window is a measured utilization span at 0.0
+    assert node.loop.utilization.per_phase()[IDLE_PHASE] == 0.0
+    # idle steps advance the loop's step counter (governor cadence)
+    assert node.loop.steps_done == 1
+
+
+def test_unpark_does_not_backbook_the_parked_span(rng_key):
+    """While a loop is parked, its draw is the power planner's to book
+    (gated/parked watts); re-admission must restart idle accounting, not
+    book the whole parked span a second time at floor watts."""
+    from repro.models.model import Model
+    cfg = get_config("tiny-test")
+    model = Model(cfg)
+    t = [0.0]
+    node = Node.build("w0", model, params=model.init(rng_key), slots=2,
+                      max_seq=32, clock=lambda: t[0])
+    node.loop.step()                        # idle; establishes _t_mark
+    ws0 = node.meter.ledger.total_ws
+    node.loop.park()
+    t[0] += 100.0                           # long parked span (wall time)
+    node.loop.unpark()
+    node.loop.step()                        # first idle after re-admission
+    floor = node.meter.envelope.gated_idle
+    booked = node.meter.ledger.total_ws - ws0
+    assert booked < floor * 1.0             # nowhere near 100 s x floor W
+
+
+# ---------------------------------------------------------------------------
+# Forecaster
+# ---------------------------------------------------------------------------
+
+def test_forecaster_rate_rises_on_bursts_and_decays_in_troughs():
+    f = ArrivalForecaster(alpha=0.5, prior_gap=32.0)
+    assert f.rate() == pytest.approx(1.0 / 32.0)    # prior until warm
+    for t in range(0, 10):                          # burst: 1/step
+        f.observe(t)
+    burst_rate = f.rate(now=10)
+    assert burst_rate > 0.3                         # ~1 req/step learned
+    # a long trough decays the rate even with no new observations
+    assert f.rate(now=200) < 0.01
+    assert f.rate(now=200) < f.rate(now=50) < burst_rate
+    # the first post-trough arrival is winsorized: recovery is fast
+    f.observe(200), f.observe(201), f.observe(202)
+    assert f.rate(now=202) > 0.05
+
+
+def test_forecaster_queue_depth_scales_with_servers():
+    f = ArrivalForecaster(alpha=0.5)
+    for t in range(0, 40):
+        f.observe(t)                                # ~1 req/step
+    service = 6.0
+    lq1 = f.expected_queue_depth(2, service, now=40)    # overloaded
+    lq2 = f.expected_queue_depth(16, service, now=40)   # comfortable
+    assert lq1 > f.utilization(2, service, now=40) > 1.0
+    assert lq2 < 1.0
+    assert lq1 > lq2
+
+
+# ---------------------------------------------------------------------------
+# Power states
+# ---------------------------------------------------------------------------
+
+def test_gate_and_wake_book_idle_and_transition_phases():
+    node = sim_envelope_node("g0", slots=2, step_s=TICK)
+    machine = _planner().policy.states
+    from repro.fleet.power import NodePowerState
+    m = NodePowerState(node, policy=machine)
+    floor = node.meter.envelope.gated_idle
+    # gated ticks book the parked draw (never above the floor)
+    node.loop.park()
+    m.gate(step=0)
+    m.tick(step=1)
+    pe = node.meter.ledger.phases[IDLE_PHASE]
+    assert pe.ws == pytest.approx(m.parked_watts * TICK, rel=1e-9)
+    assert m.parked_watts <= floor
+    # waking books the boot energy as one transition window
+    ws0 = node.meter.ledger.total_ws
+    booked = m.wake(step=2)
+    tr = node.meter.ledger.phases[TRANSITION_PHASE]
+    assert booked == pytest.approx(machine.boot_energy_ws, rel=1e-9)
+    assert tr.ws == pytest.approx(machine.boot_energy_ws, rel=1e-9)
+    assert node.meter.ledger.total_ws == pytest.approx(ws0 + booked,
+                                                       rel=1e-9)
+    # warmup elapses -> probation, and the node is unparked for a canary
+    assert m.tick(step=2 + machine.warmup_steps) == "probe"
+    assert m.state == PROBATION and not node.parked
+    # the canary finishing admits the node
+    canary = _req(99)
+    m.assign_canary(canary, step=10)
+    canary.done = True
+    assert m.tick(step=11) == "admit"
+    assert m.state == ACTIVE
+    # everything booked under the infra tenant
+    tenants = set(node.meter.ledger.rollup("tenant"))
+    assert tenants == {INFRA_TENANT}
+
+
+def test_probation_canary_timeout_regates_and_moves_the_load():
+    """A canary that overruns its window regates the node — and the
+    canary (plus anything queued there) drains to another node instead
+    of being stranded on a parked loop."""
+    states = PowerStatePolicy(gate_watts=2.0, boot_energy_ws=1.0,
+                              warmup_steps=0, cooldown_steps=4,
+                              canary_timeout_steps=5)
+    nodes, sched = _fleet(n=2, mode="gate", states=states)
+    m = sched.planner.machine(nodes[1])
+    nodes[1].loop.park()
+    m.gate(0)
+    m.wake(1)
+    sched.step()                            # warmup 0 -> probation
+    assert m.state == PROBATION
+    req = _req(0, max_new=50)               # outlives the canary window
+    assert sched.submit(req) is nodes[1]    # ... so it becomes the canary
+    for _ in range(10):
+        sched.step()
+    assert m.state == GATED and nodes[1].parked
+    assert any(e.action == "regate" for e in sched.planner.events)
+    # the canary survived the regate: it finishes on the other node
+    while sched.has_work:
+        sched.step()
+    assert req.done and len(req.out) == 50
+    assert req in nodes[0].loop.finished
+
+
+# ---------------------------------------------------------------------------
+# The deterministic burst -> trough -> burst end-to-end (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_consolidate_and_gate_end_to_end():
+    nodes, sched = _fleet(n=3, mode="gate")
+    planner = sched.planner
+    finished = sched.run(arrivals=_diurnal(), max_steps=2000)
+
+    # every request of both bursts finished with its full token budget
+    assert sorted(r.rid for r in finished) == list(range(20))
+    assert all(len(r.out) == 8 for r in finished)
+
+    # the trough gated spare nodes at a checkpoint boundary ...
+    gates = [e for e in planner.events if e.action == "gate"]
+    assert gates and all(e.step % sched.policy.checkpoint_every == 0
+                         for e in gates)
+    assert gates[0].detected_step <= gates[0].step
+    # ... and the next burst woke + probed + canary-admitted at least one
+    actions = [e.action for e in planner.events]
+    for needed in ("wake", "probe", "admit"):
+        assert needed in actions, actions
+    wake = next(e for e in planner.events if e.action == "wake")
+    assert wake.step % sched.policy.checkpoint_every == 0
+    admit = next(e for e in planner.events if e.action == "admit")
+    assert admit.step > wake.step
+
+    # the SLO held throughout
+    assert planner.max_queue_depth <= planner.policy.slo_queue_depth
+
+    # idle + transition are first-class phases; every rollup cut still
+    # sums to total_ws, and the fleet ledger equals the node meters
+    phases = set(sched.ledger.rollup("phase"))
+    assert {IDLE_PHASE, TRANSITION_PHASE, "decode"} <= phases
+    total = sum(n.meter.ledger.total_ws for n in nodes)
+    assert sched.ledger.total_ws == pytest.approx(total, rel=1e-12)
+    for by in ("node", "tenant", "phase"):
+        assert sum(pe.ws for pe in sched.ledger.rollup(by).values()) == \
+            pytest.approx(total, rel=1e-12)
+    # infra energy (idle floors, boot) is billed to the infra tenant,
+    # not to any request tenant
+    infra = sched.ledger.rollup("tenant")[INFRA_TENANT].ws
+    idle_tr = sum(sched.ledger.rollup("phase")[p].ws
+                  for p in (IDLE_PHASE, TRANSITION_PHASE))
+    assert infra == pytest.approx(idle_tr, rel=1e-9)
+
+
+def test_gate_beats_always_on_on_total_ws():
+    """The acceptance A/B: same diurnal script, consolidate-and-gate must
+    beat always-on on total Ws while serving everything."""
+    arrivals = _diurnal()
+    _, sched_on = _fleet(n=3, mode="always_on")
+    fin_on = sched_on.run(arrivals=[(s, _req(r.rid, r.tenant, r.max_new))
+                                    for s, r in arrivals], max_steps=2000)
+    _, sched_gate = _fleet(n=3, mode="gate")
+    fin_gate = sched_gate.run(arrivals=arrivals, max_steps=2000)
+    assert len(fin_on) == len(fin_gate) == 20
+    assert sched_gate.ledger.total_ws < sched_on.ledger.total_ws
+    # always_on keeps everything powered: no placement transitions, and
+    # the idle floor dominates the trough
+    assert all(e.action not in ("gate", "wake")
+               for e in sched_on.planner.events)
+    assert set(sched_on.planner.states.values()) == {ACTIVE}
+    assert sched_on.ledger.rollup("phase")[IDLE_PHASE].ws > \
+        sched_gate.ledger.rollup("phase")[IDLE_PHASE].ws
+
+
+def test_drained_node_reenters_via_probation():
+    """A node parked by a fleet migration (not by the planner) is probed
+    back after cooldown instead of staying parked for the run."""
+    nodes, sched = _fleet(n=2, mode="gate")
+    nodes[0].loop.park()                    # as a checkpoint drain would
+    for _ in range(40):
+        sched.step()
+    probe = [e for e in sched.planner.events
+             if e.node == "n0" and e.action == "probe"]
+    assert probe
+    assert sched.planner.machine(nodes[0]).state == PROBATION
+    # the next submit becomes its canary and re-admits it
+    req = _req(0, max_new=2)
+    assert sched.submit(req) is nodes[0]
+    while sched.has_work:
+        sched.step()
+    sched.planner.tick(sched.steps + 1)
+    assert sched.planner.machine(nodes[0]).state == ACTIVE
+
+
+def test_route_skips_non_active_nodes():
+    nodes, sched = _fleet(n=2, mode="gate")
+    m = sched.planner.machine(nodes[1])
+    nodes[1].loop.park()
+    m.gate(0)
+    assert sched.route(_req(0)) is nodes[0]
+    # min_active stops the planner from gating the last node
+    sched.planner._park_pending(1, nodes[0], "gate", 0.0, 0.0, 1)
+    assert sched.planner.checkpoint(8) == []
+    assert not nodes[0].parked
+
+
+# The hypothesis property tests for the planner live in
+# tests/test_fleet_power_invariants.py (they need the optional dev dep).

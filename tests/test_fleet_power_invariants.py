@@ -1,0 +1,103 @@
+"""Property tests for the fleet power planner (needs hypothesis).
+
+Invariants the placement layer leans on:
+
+  * every forecaster output the planner consumes — rate, gap,
+    utilization, expected queue depth — is finite and non-negative,
+    whatever observation stream it was fed (unsorted, duplicated, huge
+    troughs, zero service times);
+  * a gated node books at most the idle floor's Watt*seconds per tick,
+    even when the configured parked draw is nonsense;
+  * whatever the arrival script, the fleet ledger equals the node meters
+    exactly and every rollup cut — now including ``idle`` and
+    ``transition`` — sums to ``total_ws``.
+"""
+import math
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev dep
+from hypothesis import given, settings, strategies as st
+
+from fleet_sim import sim_envelope_node
+from repro.fleet import (ArrivalForecaster, FleetPolicy, FleetPowerPlanner,
+                         FleetScheduler, PowerPlanPolicy, PowerStatePolicy)
+from repro.serve.engine import Request
+
+TICK = 0.01
+
+_TIMES = st.lists(st.floats(min_value=-1e9, max_value=1e9,
+                            allow_nan=False, allow_infinity=False),
+                  min_size=0, max_size=40)
+
+
+def _req(rid, max_new=3):
+    return Request(rid=rid, prompt=np.full(3, 2, np.int32),
+                   max_new=max_new)
+
+
+@settings(max_examples=100, deadline=None)
+@given(times=_TIMES,
+       servers=st.integers(min_value=1, max_value=64),
+       service=st.floats(min_value=0.0, max_value=1e4,
+                         allow_nan=False, allow_infinity=False),
+       now=st.floats(min_value=-1e9, max_value=1e9,
+                     allow_nan=False, allow_infinity=False))
+def test_forecaster_outputs_finite_nonnegative(times, servers, service,
+                                               now):
+    f = ArrivalForecaster()
+    for t in times:
+        f.observe(t)
+    for value in (f.rate(), f.rate(now=now), f.gap(now=now),
+                  f.utilization(servers, service, now=now),
+                  f.expected_queue_depth(servers, service, now=now),
+                  f.expected_queue_depth(servers, service, now=now,
+                                         horizon=0.0)):
+        assert math.isfinite(value) and value >= 0.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(gate_watts=st.floats(min_value=0.0, max_value=1e4,
+                            allow_nan=False, allow_infinity=False),
+       ticks=st.integers(min_value=1, max_value=20))
+def test_gated_node_books_at_most_floor_ws(gate_watts, ticks):
+    from repro.fleet.power import NodePowerState
+    node = sim_envelope_node("h0", slots=2, step_s=TICK)
+    m = NodePowerState(node, policy=PowerStatePolicy(
+        gate_watts=gate_watts, cooldown_steps=10_000))
+    node.loop.park()
+    m.gate(0)
+    for k in range(ticks):
+        m.tick(k + 1)
+    floor = node.meter.envelope.gated_idle
+    booked = node.meter.ledger.total_ws
+    assert 0.0 <= booked <= floor * TICK * ticks * (1 + 1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(bursts=st.lists(st.tuples(
+    st.integers(min_value=0, max_value=200),      # burst start
+    st.integers(min_value=1, max_value=6)),       # burst size
+    min_size=1, max_size=4))
+def test_planner_ledger_conserves_joules_under_any_script(bursts):
+    nodes = [sim_envelope_node(f"n{i}", slots=2, step_s=TICK)
+             for i in range(2)]
+    sched = FleetScheduler(
+        nodes, policy=FleetPolicy(flush_every=4, checkpoint_every=8,
+                                  migrate_on_drift=False),
+        planner=FleetPowerPlanner(policy=PowerPlanPolicy(
+            mode="gate", plan_every=4, min_active_steps=8,
+            states=PowerStatePolicy(gate_watts=2.0, boot_energy_ws=1.0,
+                                    warmup_steps=2, cooldown_steps=8))))
+    arrivals, rid = [], 0
+    for start, size in sorted(bursts):
+        for i in range(size):
+            arrivals.append((start + i, _req(rid)))
+            rid += 1
+    sched.run(arrivals=arrivals, max_steps=600)
+    total = sum(n.meter.ledger.total_ws for n in nodes)
+    assert sched.ledger.total_ws == pytest.approx(total, rel=1e-9)
+    for by in ("node", "tenant", "phase"):
+        assert sum(pe.ws for pe in sched.ledger.rollup(by).values()) == \
+            pytest.approx(total, rel=1e-9)

@@ -352,3 +352,41 @@ def test_power_report_cli(tmp_path):
     rep = json.loads(out.stdout)
     assert rep["ws_ratio"] == pytest.approx(222.0 / 1694.0, rel=1e-6)
     assert rep["baseline"]["phases"]["cpu"]["avg_w"] == pytest.approx(121.0)
+
+
+def test_power_report_ledger_renders_idle_and_transition_rows(tmp_path):
+    """A fleet-planner ledger (idle floors + boot transitions billed to
+    the infra tenant) renders through the jax-free reporter with the new
+    phases as first-class rollup rows that still sum to total_ws."""
+    import subprocess
+    import sys
+    from pathlib import Path
+    from repro.telemetry import (EnergyLedger, IDLE_PHASE, INFRA_TENANT,
+                                 TRANSITION_PHASE)
+    repo = Path(__file__).resolve().parents[1]
+    led = EnergyLedger()
+    led.add("decode", 10.0, 0.1, node="n0", tenant="teamA")
+    led.add(IDLE_PHASE, 2.5, 0.5, node="n1", tenant=INFRA_TENANT)
+    led.add(TRANSITION_PHASE, 1.5, 0.05, node="n1", tenant=INFRA_TENANT)
+    path = tmp_path / "fleet.json"
+    led.to_json(path)
+    out = subprocess.run(
+        [sys.executable, str(repo / "scripts" / "power_report.py"),
+         "--ledger", str(path), "--json"],
+        capture_output=True, text=True, timeout=60)
+    assert out.returncode == 0, out.stderr
+    rep = json.loads(out.stdout)
+    assert rep["total_ws"] == pytest.approx(14.0)
+    roll = rep["rollups"]["phase"]
+    assert roll[IDLE_PHASE]["ws"] == pytest.approx(2.5)
+    assert roll[TRANSITION_PHASE]["ws"] == pytest.approx(1.5)
+    assert sum(r["ws"] for r in roll.values()) == pytest.approx(14.0)
+    assert rep["rollups"]["tenant"][INFRA_TENANT]["ws"] == \
+        pytest.approx(4.0)
+    # the text rendering carries the same rows
+    txt = subprocess.run(
+        [sys.executable, str(repo / "scripts" / "power_report.py"),
+         "--ledger", str(path)],
+        capture_output=True, text=True, timeout=60)
+    assert txt.returncode == 0, txt.stderr
+    assert IDLE_PHASE in txt.stdout and TRANSITION_PHASE in txt.stdout
