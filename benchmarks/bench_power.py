@@ -92,6 +92,12 @@ DATA_DIR = Path(__file__).resolve().parent / "data"
 #: structured output of the last run() (list of WsComparison.to_dict())
 LAST_REPORT: list = []
 
+#: per-workload throughput metrics of the last run() — entries of
+#: ``{"workload": ..., "metrics": {...}}`` that the harness's --json-out
+#: folds into its top-level ``metrics`` block (``arrivals_per_sec`` is
+#: the fleet workloads' wall-clock arrival throughput)
+LAST_METRICS: list = []
+
 
 def _mriq_host_comparison():
     node = R740_ARRIA10
@@ -247,8 +253,9 @@ def _fleet_serve(router: str):
         prompt = rng.integers(2, cfg.vocab_size, size=5).astype(np.int32)
         arrivals.append(Request(rid=i, prompt=prompt, max_new=8,
                                 tenant=tenants[i % len(tenants)]))
+    t0 = time.perf_counter()
     finished = sched.run(arrivals=arrivals, arrival_every=4)
-    return sched, finished
+    return sched, finished, time.perf_counter() - t0, len(arrivals)
 
 
 def _fleet_run_energy(label: str, sched, finished) -> RunEnergy:
@@ -264,10 +271,22 @@ def _fleet_run_energy(label: str, sched, finished) -> RunEnergy:
     return run
 
 
+def _record_metrics(workload: str, sched, wall: float,
+                    n_arrivals: int) -> None:
+    LAST_METRICS.append({
+        "workload": workload,
+        "metrics": {
+            "arrivals_per_sec": n_arrivals / max(wall, 1e-9),
+            "fleet_steps_per_sec": sched.steps / max(wall, 1e-9),
+            "wall_seconds": wall,
+            "total_ws": sched.ledger.total_ws}})
+
+
 def _fleet_comparison():
     """Round-robin vs energy-aware routing over the same fleet + stream."""
-    sched_rr, fin_rr = _fleet_serve("round_robin")
-    sched_ea, fin_ea = _fleet_serve("energy")
+    sched_rr, fin_rr, _, _ = _fleet_serve("round_robin")
+    sched_ea, fin_ea, wall, n_arr = _fleet_serve("energy")
+    _record_metrics("fleet_tiny", sched_ea, wall, n_arr)
     cmp_ = compare(_fleet_run_energy("round_robin(fleet)", sched_rr, fin_rr),
                    _fleet_run_energy("energy_router(fleet)", sched_ea,
                                      fin_ea),
@@ -314,14 +333,16 @@ def _placement_serve(mode: str):
         arrivals.append((due, Request(rid=rid, prompt=prompt, max_new=8,
                                       tenant=f"team{rid % 2}")))
         rid += 1
+    t0 = time.perf_counter()
     finished = sched.run(arrivals=arrivals, max_steps=2000)
-    return sched, finished
+    return sched, finished, time.perf_counter() - t0, len(arrivals)
 
 
 def _placement_comparison():
     """Always-on vs consolidate-and-gate over the same diurnal script."""
-    sched_on, fin_on = _placement_serve("always_on")
-    sched_gate, fin_gate = _placement_serve("gate")
+    sched_on, fin_on, _, _ = _placement_serve("always_on")
+    sched_gate, fin_gate, wall, n_arr = _placement_serve("gate")
+    _record_metrics("placement_tiny", sched_gate, wall, n_arr)
     cmp_ = compare(
         _fleet_run_energy("always_on(fleet)", sched_on, fin_on),
         _fleet_run_energy("consolidate_gate(fleet)", sched_gate,
@@ -344,6 +365,7 @@ def _placement_comparison():
 
 def run() -> list[str]:
     lines: list[str] = []
+    LAST_METRICS.clear()
     t0 = time.time()
     comparisons = [
         _mriq_host_comparison(),

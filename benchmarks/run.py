@@ -48,7 +48,10 @@ def main() -> None:
     args = ap.parse_args()
     names = (args.only.split(",") if args.only else list(SUITES))
 
-    doc: dict = {"suites": {}}
+    # the report always leads with what ran and what it measured: suites
+    # fold their LAST_METRICS entries ({"workload", "metrics"}) into the
+    # top-level metrics block keyed by workload
+    doc: dict = {"workload": ",".join(names), "metrics": {}, "suites": {}}
     failures = 0
     for name in names:
         mod = SUITES[name]
@@ -64,6 +67,10 @@ def main() -> None:
             report = getattr(mod, "LAST_REPORT", None)
             if report:
                 entry["report"] = list(report)
+            doc["metrics"].setdefault(name, {})["suite_seconds"] = \
+                entry["seconds"]
+            for m in getattr(mod, "LAST_METRICS", None) or []:
+                doc["metrics"][m["workload"]] = dict(m["metrics"])
             print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         except Exception as e:  # report and continue
             failures += 1

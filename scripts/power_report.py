@@ -60,8 +60,14 @@ def main() -> None:
     if args.baseline is not None and args.trace is None:
         ap.error("--baseline requires --trace")
     for p in [args.trace, args.baseline] + (args.ledger or []):
-        if p is not None and not Path(p).is_file():
+        if p is None:
+            continue
+        if not Path(p).is_file():
             ap.error(f"no such file: {p}")
+        if Path(p).stat().st_size == 0:
+            # an empty trace renders as an all-zero table that reads like
+            # a real (idle) run — fail loudly instead
+            ap.error(f"empty file: {p}")
 
     # json mode collects every requested section into ONE document (a bare
     # section when only one was asked for — the original CLI contract)

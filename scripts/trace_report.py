@@ -1,0 +1,140 @@
+"""Span-trace report — render a serve run's span export offline.
+
+    PYTHONPATH=src python scripts/trace_report.py --trace spans.json
+    PYTHONPATH=src python scripts/trace_report.py --trace spans.jsonl \
+        [--metrics metrics.prom] [--slowest 10] [--json]
+
+``--trace`` accepts either export the serving CLI writes (``--trace-spans``
+of ``repro.launch.serve``): the Chrome ``trace_event`` JSON or the raw
+spans JSONL sidecar — the format is auto-detected.  The text report shows
+
+  * a per-span-name summary (count, total/mean/max seconds, attributed
+    Watt*seconds),
+  * the slowest individual spans,
+  * a per-phase attributed-Ws treemap (text bars), which is where
+    synthesized ``unattributed:*`` spans show up as visible debt.
+
+``--metrics`` additionally echoes the quantile lines of a Prometheus
+text export (the serving CLI's ``--metrics-out``).  Imports only
+``repro.obs`` — no jax — so it runs on a machine that just holds the
+logs.  Exits non-zero on a missing, empty, or span-less input.
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.obs import read_chrome_trace, read_spans_jsonl  # noqa: E402
+
+BAR_WIDTH = 40
+
+
+def load_trace(path: Path) -> list:
+    """Auto-detect Chrome trace JSON vs spans JSONL by the first byte."""
+    head = path.read_text(errors="replace").lstrip()[:1]
+    if head == "{" and path.suffix != ".jsonl":
+        return read_chrome_trace(path)
+    try:
+        return read_spans_jsonl(path)
+    except (KeyError, ValueError):
+        return read_chrome_trace(path)
+
+
+def summarize(spans: list) -> dict:
+    """Per-span-name rollup + per-phase attributed-Ws rollup."""
+    by_name: dict = {}
+    by_phase: dict = {}
+    for sp in spans:
+        row = by_name.setdefault(sp.name, {
+            "count": 0, "seconds": 0.0, "max_seconds": 0.0, "ws": 0.0})
+        row["count"] += 1
+        row["seconds"] += sp.seconds
+        row["max_seconds"] = max(row["max_seconds"], sp.seconds)
+        row["ws"] += sp.attributed_ws
+        phase = str(sp.tags.get("phase", "-"))
+        by_phase[phase] = by_phase.get(phase, 0.0) + sp.attributed_ws
+    return {"spans": len(spans),
+            "nodes": sorted({sp.node for sp in spans}),
+            "attributed_ws": sum(sp.attributed_ws for sp in spans),
+            "by_name": by_name, "by_phase": by_phase}
+
+
+def render(summary: dict, spans: list, slowest: int) -> list:
+    lines = [f"== span trace: {summary['spans']} spans on "
+             f"{len(summary['nodes'])} rows "
+             f"({summary['attributed_ws']:.3f}Ws attributed) ==",
+             f"{'span':<22}{'count':>7}{'total_s':>10}{'mean_s':>10}"
+             f"{'max_s':>10}{'Ws':>10}"]
+    for name, row in sorted(summary["by_name"].items(),
+                            key=lambda kv: -kv[1]["seconds"]):
+        mean = row["seconds"] / max(row["count"], 1)
+        lines.append(f"{name:<22}{row['count']:>7}{row['seconds']:>10.4f}"
+                     f"{mean:>10.5f}{row['max_seconds']:>10.5f}"
+                     f"{row['ws']:>10.3f}")
+    ranked = sorted(spans, key=lambda sp: -sp.seconds)[:max(slowest, 0)]
+    if ranked:
+        lines.append(f"-- slowest {len(ranked)} spans --")
+        for sp in ranked:
+            lines.append(f"  {sp.seconds:>9.5f}s {sp.name:<20} "
+                         f"node={sp.node} t0={sp.t0:.5f} "
+                         f"ws={sp.attributed_ws:.3f}")
+    total_ws = sum(w for w in summary["by_phase"].values() if w > 0)
+    if total_ws > 0:
+        lines.append("-- attributed Ws by phase --")
+        for phase, ws in sorted(summary["by_phase"].items(),
+                                key=lambda kv: -kv[1]):
+            bar = "#" * max(int(round(BAR_WIDTH * ws / total_ws)),
+                            1 if ws > 0 else 0)
+            lines.append(f"  {phase:<12}{ws:>10.3f}Ws "
+                         f"{100 * ws / total_ws:>5.1f}% {bar}")
+    return lines
+
+
+def render_metrics(path: Path) -> list:
+    """Echo the quantile summary lines of a Prometheus text export."""
+    lines = [f"-- metrics quantiles ({path.name}) --"]
+    for line in path.read_text().splitlines():
+        if "quantile=" in line and not line.startswith("#"):
+            lines.append(f"  {line}")
+    return lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", required=True,
+                    help="Chrome trace JSON or spans JSONL to render")
+    ap.add_argument("--metrics", default=None,
+                    help="Prometheus text export to echo quantiles from")
+    ap.add_argument("--slowest", type=int, default=8,
+                    help="how many slowest spans to list")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the summary as JSON instead of text")
+    args = ap.parse_args()
+
+    path = Path(args.trace)
+    if not path.is_file():
+        sys.exit(f"no such file: {path}")
+    if path.stat().st_size == 0:
+        sys.exit(f"empty file: {path}")
+    spans = load_trace(path)
+    if not spans:
+        sys.exit(f"no spans in {path}")
+
+    summary = summarize(spans)
+    if args.json:
+        print(json.dumps(summary, indent=2, sort_keys=True))
+    else:
+        for line in render(summary, spans, args.slowest):
+            print(line)
+        if args.metrics:
+            mpath = Path(args.metrics)
+            if not mpath.is_file():
+                sys.exit(f"no such file: {mpath}")
+            for line in render_metrics(mpath):
+                print(line)
+
+
+if __name__ == "__main__":
+    main()

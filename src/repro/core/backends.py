@@ -40,6 +40,7 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Callable, Optional, Protocol, runtime_checkable
 
+from repro import obs
 from repro.configs.base import ArchConfig, PlanConfig, SHAPES, ShapeSpec
 from repro.core.fitness import TIMEOUT_PENALTY_S, TIMEOUT_SECONDS, fitness
 from repro.core.intensity import estimate_program
@@ -398,6 +399,22 @@ class CompiledBackend:
             meta={"source": self.name, "arch": ctx.cfg.name,
                   "shape": ctx.shape_name, "mesh": rec.get("mesh", ""),
                   "plan": rec.get("plan", "")})
+        tr = obs.TRACER
+        if tr.enabled and stages:
+            # the stage sidecar's subprocess wall clock becomes its own
+            # trace row: one root per trial, one child span per stage
+            row = f"dryrun:{ctx.cfg.name}:{ctx.shape_name}"
+            root = tr.begin("backend.compiled", node=row,
+                            t0=min(s["t0"] for s in stages),
+                            tags={"rung": self.name,
+                                  "mesh": rec.get("mesh", ""),
+                                  "plan": rec.get("plan", "")})
+            for s in stages:
+                tr.begin(f"dryrun.{s['name']}", node=row, t0=s["t0"],
+                         parent=root,
+                         tags={"util": s.get("util", 0.0)}
+                         ).finish(s["t1"])
+            root.finish(max(s["t1"] for s in stages))
         seconds = trace.duration
         energy = trace.integrate()
         # HLO cost_analysis counts loop bodies once -> lift the collective

@@ -15,6 +15,7 @@ from __future__ import annotations
 from dataclasses import dataclass, replace
 from typing import Optional
 
+from repro import obs
 from repro.telemetry.energy import EnergyLedger, WsBudget
 
 
@@ -63,6 +64,7 @@ class AdmissionController:
         False — the caller must not enqueue the request."""
         budget = self.budget_for(req.tenant)
         if budget is None:
+            self._observe(req, step, accepted=True)
             return True
         budget.roll(step, ledger, req.tenant)
         if budget.exhausted(ledger, req.tenant):
@@ -70,8 +72,26 @@ class AdmissionController:
                 step=step, rid=req.rid, tenant=req.tenant,
                 spent_ws=budget.spent_ws(ledger, req.tenant),
                 budget_ws=budget.budget_ws))
+            self._observe(req, step, accepted=False,
+                          spent_ws=self.rejections[-1].spent_ws)
             return False
+        self._observe(req, step, accepted=True)
         return True
+
+    def _observe(self, req, step: int, accepted: bool,
+                 spent_ws: float = 0.0) -> None:
+        tr = obs.TRACER
+        if tr.enabled:
+            tags = {"rid": req.rid, "tenant": req.tenant, "step": step}
+            if not accepted:
+                tags["spent_ws"] = spent_ws
+            tr.instant("admission.accept" if accepted
+                       else "admission.throttle", tags=tags)
+        mx = obs.METRICS
+        if mx.enabled:
+            mx.counter("admission_accepts_total" if accepted
+                       else "admission_rejections_total",
+                       "admission verdicts").inc()
 
     def rejected_by_tenant(self) -> dict:
         out: dict[str, int] = {}

@@ -24,6 +24,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Optional
 
+from repro import obs
 from repro.fleet.power.forecast import ArrivalForecaster
 from repro.fleet.power.states import (ACTIVE, GATED, PARKED, PROBATION,
                                       WAKING, NodePowerState,
@@ -194,6 +195,11 @@ class FleetPowerPlanner:
                 k = i
                 break
         keep = {n.name for n in ranked[:k]}
+        tr = obs.TRACER
+        if tr.enabled:
+            tr.instant("power.plan",
+                       tags={"step": step, "rate": rate, "lq": lq,
+                             "active_target": k, "backlog": backlog})
         # a newer plan rescinds pending placements it now contradicts —
         # a burst arriving between the plan that parked a gate and the
         # checkpoint that would apply it must cancel the gate, not pay
@@ -251,6 +257,15 @@ class FleetPowerPlanner:
                     step=step, detected_step=step, node=node.name,
                     action=action, rate=self.forecaster.rate(now=step),
                     reason=f"probe policy ({m.state})"))
+                mx = obs.METRICS
+                if mx.enabled:
+                    mx.counter("placement_events_total",
+                               "gate/wake/probe/admit/regate decisions"
+                               ).inc()
+        mx = obs.METRICS
+        if mx.enabled:
+            mx.gauge("active_nodes", "routable (ACTIVE) nodes").set(
+                sum(1 for m in self._machines.values() if m.routable))
         if step % self.policy.plan_every == 0:
             self.plan(step)
 
@@ -313,6 +328,12 @@ class FleetPowerPlanner:
                     active_target=p.active_target,
                     reason="forecast demand exceeds the active set"))
         self.events.extend(applied)
+        if applied:
+            mx = obs.METRICS
+            if mx.enabled:
+                mx.counter("placement_events_total",
+                           "gate/wake/probe/admit/regate decisions"
+                           ).inc(len(applied))
         return applied
 
     # -- reporting -----------------------------------------------------------

@@ -36,6 +36,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Optional
 
+from repro import obs
 from repro.telemetry.energy import (IDLE_PHASE, INFRA_TENANT,
                                     TRANSITION_PHASE)
 
@@ -74,6 +75,10 @@ class NodePowerState:
     wake_done_step: int = 0
     canary: Optional[object] = None     # the probation Request
     canary_step: int = 0
+    # open observability spans on the node meter's timeline (period
+    # spans: gated/parked stretches, probation windows, canary children)
+    _span: Optional[object] = field(default=None, repr=False)
+    _canary_span: Optional[object] = field(default=None, repr=False)
 
     # -- draws ---------------------------------------------------------------
 
@@ -100,6 +105,36 @@ class NodePowerState:
         return self.node.meter.observe(seconds, phase=phase, watts=watts,
                                        tenants=[INFRA_TENANT])
 
+    # -- observability spans (meter-timeline period spans) -------------------
+
+    def _close_span(self, outcome: str = "") -> None:
+        if self._span is not None:
+            if outcome:
+                self._span.tags["outcome"] = outcome
+            self._span.finish(self.node.meter.now)
+            self._span = None
+
+    def _close_canary(self, outcome: str) -> None:
+        if self._canary_span is not None:
+            self._canary_span.tags["outcome"] = outcome
+            self._canary_span.finish(self.node.meter.now)
+            self._canary_span = None
+
+    def _extend_span(self, name: str, seconds: float, ws: float) -> None:
+        """Lazily open (then grow) the period span covering this state's
+        per-tick bookings; ``ws`` feeds the joule-attribution weight."""
+        tr = obs.TRACER
+        if not tr.enabled:
+            return
+        now = self.node.meter.now
+        if self._span is None or self._span.name != name:
+            self._close_span()
+            self._span = tr.begin(
+                name, node=self.node.name, t0=max(now - seconds, 0.0),
+                tags={"phase": IDLE_PHASE, "tenant": INFRA_TENANT,
+                      "ws": 0.0, "step": self.since_step})
+        self._span.extend(now, ws=ws)
+
     # -- transitions (the planner applies these at checkpoints) --------------
 
     def gate(self, step: int) -> None:
@@ -108,6 +143,8 @@ class NodePowerState:
         self.state = GATED
         self.since_step = step
         self.canary = None
+        self._close_canary("regate")
+        self._close_span("gated")
 
     def note_parked(self, step: int) -> None:
         """A fleet migration parked this node outside the planner: track
@@ -123,14 +160,29 @@ class NodePowerState:
         self.state = WAKING
         self.since_step = step
         self.wake_done_step = step + self.policy.warmup_steps
+        self._close_span("wake")
         warmup_s = max(self.policy.warmup_steps, 1) * self._step_seconds()
-        return self._book(warmup_s, self.policy.boot_energy_ws / warmup_s,
-                          TRANSITION_PHASE)
+        t0 = self.node.meter.now
+        booked = self._book(warmup_s, self.policy.boot_energy_ws / warmup_s,
+                            TRANSITION_PHASE)
+        tr = obs.TRACER
+        if tr.enabled:
+            tr.begin("power.wake", node=self.node.name, t0=t0,
+                     tags={"phase": TRANSITION_PHASE,
+                           "tenant": INFRA_TENANT, "ws": booked,
+                           "step": step}).finish(self.node.meter.now)
+        return booked
 
     def begin_probation(self, step: int) -> None:
         self.state = PROBATION
         self.since_step = step
         self.canary = None
+        self._close_span("probe")
+        tr = obs.TRACER
+        if tr.enabled:
+            self._span = tr.begin("power.probation", node=self.node.name,
+                                  t0=self.node.meter.now,
+                                  tags={"step": step})
         self.node.loop.unpark()
 
     def admit(self, step: int) -> None:
@@ -138,10 +190,19 @@ class NodePowerState:
         self.state = ACTIVE
         self.since_step = step
         self.canary = None
+        self._close_canary("done")
+        self._close_span("admit")
 
     def assign_canary(self, req, step: int) -> None:
         self.canary = req
         self.canary_step = step
+        tr = obs.TRACER
+        if tr.enabled:
+            self._close_canary("superseded")
+            self._canary_span = tr.begin(
+                "power.canary", node=self.node.name,
+                t0=self.node.meter.now, parent=self._span,
+                tags={"rid": getattr(req, "rid", None), "step": step})
 
     # -- per-step accounting + probe policy ----------------------------------
 
@@ -154,9 +215,11 @@ class NodePowerState:
         (``"probe"`` / ``"admit"`` / ``"regate"``) or None."""
         dt = self._step_seconds()
         if self.state == GATED:
-            self._book(dt, self.parked_watts, IDLE_PHASE)
+            ws = self._book(dt, self.parked_watts, IDLE_PHASE)
+            self._extend_span("power.gated", dt, ws)
         elif self.state == PARKED:
-            self._book(dt, self.floor_watts, IDLE_PHASE)
+            ws = self._book(dt, self.floor_watts, IDLE_PHASE)
+            self._extend_span("power.parked", dt, ws)
             if step - self.since_step >= self.policy.cooldown_steps:
                 self.begin_probation(step)
                 return "probe"

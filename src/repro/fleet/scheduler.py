@@ -41,12 +41,17 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Optional
 
+from repro import obs
 from repro.fleet.admission import AdmissionController
 from repro.fleet.node import Node
 from repro.serve.engine import Request
 from repro.telemetry.energy import EnergyLedger, drain_delta
 
 ROUTERS = ("energy", "round_robin")
+
+#: routing fan-out is small-integer-valued: give its histogram bounds
+#: that resolve single-node candidate sets
+_CANDIDATE_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0)
 
 
 @dataclass(frozen=True)
@@ -159,21 +164,37 @@ class FleetScheduler:
         take the load (serving beats the probe protocol: a drain or a
         burst must never crash on an all-probation fleet)."""
         candidates = [n for n in self.healthy() if n is not exclude]
+        chosen = None
         if self.planner is not None and candidates:
             canary = self.planner.canary_target(candidates)
             if canary is not None:
                 self.planner.note_canary(canary, req, self.steps)
-                return canary
-            candidates = [n for n in candidates
-                          if self.planner.routable(n)] or candidates
+                chosen = canary
+            else:
+                candidates = [n for n in candidates
+                              if self.planner.routable(n)] or candidates
         if not candidates:
             raise RuntimeError("no healthy node to route to (all parked)")
-        if self.policy.router == "round_robin":
-            chosen = candidates[self._rr % len(candidates)]
-            self._rr += 1
-            return chosen
-        return min(candidates,
-                   key=lambda n: (n.marginal_ws_per_token(), n.load, n.name))
+        if chosen is None:
+            if self.policy.router == "round_robin":
+                chosen = candidates[self._rr % len(candidates)]
+                self._rr += 1
+            else:
+                chosen = min(candidates,
+                             key=lambda n: (n.marginal_ws_per_token(),
+                                            n.load, n.name))
+        tr = obs.TRACER
+        if tr.enabled:
+            tr.instant("fleet.route",
+                       tags={"rid": req.rid, "tenant": req.tenant,
+                             "node": chosen.name, "step": self.steps,
+                             "candidates": len(candidates)})
+        mx = obs.METRICS
+        if mx.enabled:
+            mx.histogram("routing_candidates", "nodes eligible per route",
+                         buckets=_CANDIDATE_BUCKETS
+                         ).observe(len(candidates))
+        return chosen
 
     # -- policy 3: tenant admission ------------------------------------------
 
@@ -188,12 +209,27 @@ class FleetScheduler:
         flush cadence had not yet booked."""
         if self.planner is not None:
             self.planner.observe_arrival(self.steps)
+        mx = obs.METRICS
+        if mx.enabled:
+            mx.counter("arrivals_total", "submits offered to the fleet"
+                       ).inc()
+        tr = obs.TRACER
         if self.admission is not None:
             self.flush(govern=False)
             if not self.admission.admit(req, self.steps, self.ledger):
+                if tr.enabled:
+                    tr.instant("fleet.submit",
+                               tags={"rid": req.rid, "tenant": req.tenant,
+                                     "step": self.steps,
+                                     "admitted": False})
                 return None
         node = self.route(req)
         node.submit(req)
+        if tr.enabled:
+            tr.instant("fleet.submit",
+                       tags={"rid": req.rid, "tenant": req.tenant,
+                             "step": self.steps, "admitted": True,
+                             "node": node.name})
         return node
 
     # -- measurement ingestion -----------------------------------------------
@@ -206,6 +242,10 @@ class FleetScheduler:
         drain both use it, completing the ledger (totals match the meters
         exactly) while the drained energy stays accumulated for the next
         governed flush's window."""
+        tr = obs.TRACER
+        if tr.enabled:
+            tr.instant("fleet.flush",
+                       tags={"step": self.steps, "govern": govern})
         for node in self.nodes:
             d_ws, d_s = drain_delta(
                 node.meter.ledger, self.ledger, self._snapshots[node.name],
@@ -277,6 +317,16 @@ class FleetScheduler:
                             window_ws=p.window_ws, median_ws=p.median_ws)
             self.events.append(ev)
             applied.append(ev)
+            tr = obs.TRACER
+            if tr.enabled:
+                tr.instant("fleet.migrate", node=p.node,
+                           t=node.meter.now,
+                           tags={"step": self.steps, "moved": len(moved),
+                                 "targets": ",".join(ev.targets)})
+            mx = obs.METRICS
+            if mx.enabled:
+                mx.counter("fleet_migrations_total",
+                           "drift drains applied at checkpoints").inc()
             self._cooldown_until[p.node] = \
                 self.steps + self.policy.cooldown_steps
         return applied
@@ -294,6 +344,12 @@ class FleetScheduler:
         policy, so the fleet ledger carries the whole envelope integral,
         not just the busy spans."""
         self.steps += 1
+        tr = obs.TRACER
+        sp = tr.begin("fleet.step", tags={"step": self.steps}) \
+            if tr.enabled else None
+        mx = obs.METRICS
+        if mx.enabled:
+            mx.counter("fleet_steps_total", "fleet scheduler steps").inc()
         for node in self.nodes:
             if node.has_work:
                 node.loop.step()
@@ -303,9 +359,12 @@ class FleetScheduler:
             self.planner.tick(self.steps)
         if self.steps % self.policy.flush_every == 0:
             self.flush()
+        events = []
         if self.steps % self.policy.checkpoint_every == 0:
-            return self.checkpoint()
-        return []
+            events = self.checkpoint()
+        if sp is not None:
+            sp.finish(tr.clock())
+        return events
 
     def run(self, max_steps: int = 10_000, arrivals: Optional[list] = None,
             arrival_every: int = 1) -> list:

@@ -37,6 +37,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.core.adapt import ReconfigPolicy, Reconfigurator
 from repro.core.ga import GAConfig
@@ -46,6 +47,27 @@ from repro.models.model import Model
 from repro.serve.engine import Request
 from repro.telemetry import (GovernorPolicy, PowerGovernor, WsBudget,
                              render_rollups)
+
+
+def parse_diurnal(spec: str) -> list:
+    """``1:8:1,160:12:3`` -> due steps [1..8] + [160, 163, ..] — each
+    ``start:count:spacing`` burst contributes ``count`` arrivals spaced
+    ``spacing`` fleet steps apart, starting at ``start``."""
+    due = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        fields = part.split(":")
+        if len(fields) != 3:
+            raise ValueError(f"bad --diurnal burst {part!r} "
+                             f"(want start:count:spacing)")
+        start, count, spacing = (int(f) for f in fields)
+        if count < 1 or spacing < 1:
+            raise ValueError(f"bad --diurnal burst {part!r} "
+                             f"(count and spacing must be >= 1)")
+        due.extend(start + i * spacing for i in range(count))
+    return sorted(due)
 
 
 def parse_budgets(spec: str, window_steps: int) -> dict:
@@ -131,7 +153,22 @@ def main() -> None:
                     help="persist the fleet ledger (JSON) here")
     ap.add_argument("--trace-out", default=None,
                     help="persist node0's power trace (JSONL) here")
+    ap.add_argument("--diurnal", default=None,
+                    help="bursty arrival script start:count:spacing[,...]; "
+                         "overrides --requests/--arrival-every with due "
+                         "fleet steps (troughs let the placement planner "
+                         "gate idle nodes)")
+    ap.add_argument("--trace-spans", default=None,
+                    help="enable span tracing; write the Chrome trace_event "
+                         "JSON here (plus <stem>.spans.jsonl raw spans), "
+                         "rendered offline via scripts/trace_report.py")
+    ap.add_argument("--metrics-out", default=None,
+                    help="enable the metrics registry; write the Prometheus "
+                         "text exposition here")
     args = ap.parse_args()
+
+    if args.trace_spans or args.metrics_out:
+        obs.enable()
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = Model(cfg)
@@ -162,18 +199,24 @@ def main() -> None:
     tenants = [t.strip() for t in args.tenants.split(",") if t.strip()] \
         or ["default"]
     rng = np.random.default_rng(0)
-    arrivals = []
-    for i in range(args.requests):
+
+    def make_request(i: int) -> Request:
         plen = int(rng.integers(4, 12))
         prompt = rng.integers(2, cfg.vocab_size, size=plen).astype(np.int32)
-        arrivals.append(Request(rid=i, prompt=prompt, max_new=args.max_new,
-                                tenant=tenants[i % len(tenants)]))
+        return Request(rid=i, prompt=prompt, max_new=args.max_new,
+                       tenant=tenants[i % len(tenants)])
 
     t0 = time.time()
-    if args.arrival_every > 0:
+    if args.diurnal:
+        arrivals = [(due, make_request(i))
+                    for i, due in enumerate(parse_diurnal(args.diurnal))]
+        finished = sched.run(arrivals=arrivals)
+    elif args.arrival_every > 0:
+        arrivals = [make_request(i) for i in range(args.requests)]
         finished = sched.run(arrivals=arrivals,
                              arrival_every=args.arrival_every)
     else:
+        arrivals = [make_request(i) for i in range(args.requests)]
         for req in arrivals:
             sched.submit(req)
         finished = sched.run()
@@ -235,6 +278,25 @@ def main() -> None:
         print(f"ledger -> {sched.ledger.to_json(args.ledger_out)}")
     if args.trace_out:
         print(f"trace  -> {nodes[0].meter.trace.to_jsonl(args.trace_out)}")
+    if args.trace_spans:
+        from pathlib import Path
+        result = obs.attribute_joules(list(obs.TRACER.spans), sched.ledger)
+        for node_name, row in sorted(
+                result.conservation(sched.ledger).items()):
+            flag = "ok" if row["ok"] else "DRIFT"
+            print(f"attribution {node_name}: ledger {row['ledger_ws']:.4f}Ws "
+                  f"attributed {row['attributed_ws']:.4f}Ws "
+                  f"(delta {row['delta']:+.2e}) {flag}")
+        spans_out = str(Path(args.trace_spans).with_suffix(".spans.jsonl"))
+        print(f"spans  -> {obs.write_chrome_trace(result.all_spans(), args.trace_spans)}"
+              f" (+ {obs.write_spans_jsonl(result.all_spans(), spans_out)})")
+        if obs.TRACER.dropped:
+            print(f"spans  dropped {obs.TRACER.dropped} past the tracer cap")
+    if args.metrics_out:
+        print(f"metrics -> {obs.METRICS.write_prometheus(args.metrics_out)}")
+        h = obs.METRICS.histogram("queue_wait_s")
+        print("queue_wait_s " + " ".join(
+            f"p{int(q * 100)}={h.quantile(q):.4f}s" for q in obs.QUANTILES))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,103 @@
+"""Joule attribution — join ledger cells onto overlapping spans.
+
+The ``EnergyLedger`` says *what* was spent per ``(node, tenant, phase)``
+cell; the span trace says *when* and *on whose behalf*.  The join maps
+every cell's Watt*seconds onto the spans that describe it, so each span
+carries ``attributed_ws`` and the trace sums to the ledger:
+
+  * a span is a candidate for a cell when it lives on the cell's node,
+    its ``phase`` tag equals the cell's phase, and its ``tenant`` tag
+    (when present) equals the cell's tenant;
+  * the cell's Ws distributes across candidates proportional to their
+    ``ws`` tag (the exact booked energy the instrumentation accumulated
+    via ``Span.extend``), falling back to span seconds, then to an even
+    split — with the remainder pinned on the last candidate so every
+    cell conserves *exactly*, not just proportionally;
+  * a cell with no candidate spans (an uninstrumented booking) becomes a
+    synthesized ``unattributed:<phase>`` span carrying the whole cell —
+    conservation holds by construction, and the synthesized spans are
+    the visible debt ("this energy has no timeline").
+
+``conservation`` then checks the invariant the exporters rely on:
+per-node attributed Ws equals the ledger's per-node rollup.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.obs.span import Span
+
+
+@dataclass
+class AttributionResult:
+    spans: list = field(default_factory=list)        # inputs, ws filled
+    synthesized: list = field(default_factory=list)  # unattributed filler
+
+    def all_spans(self) -> list:
+        return list(self.spans) + list(self.synthesized)
+
+    def attributed_by_node(self) -> dict:
+        out: dict = {}
+        for sp in self.all_spans():
+            out[sp.node] = out.get(sp.node, 0.0) + sp.attributed_ws
+        return out
+
+    def conservation(self, ledger, tol: float = 1e-6) -> dict:
+        """Per-node check: attributed Ws vs the ledger's node rollup."""
+        attributed = self.attributed_by_node()
+        rows = {}
+        for node, pe in ledger.rollup("node").items():
+            got = attributed.get(node, 0.0)
+            rows[node] = {"ledger_ws": pe.ws, "attributed_ws": got,
+                          "delta": got - pe.ws,
+                          "ok": abs(got - pe.ws) <= tol * max(1.0, pe.ws)}
+        return rows
+
+
+def _candidates(spans_by_node: dict, node: str, tenant: str,
+                phase: str) -> list:
+    out = []
+    for sp in spans_by_node.get(node, ()):
+        if sp.tags.get("phase") != phase:
+            continue
+        if sp.tags.get("tenant", tenant) != tenant:
+            continue
+        out.append(sp)
+    return out
+
+
+def attribute_joules(spans: list, ledger) -> AttributionResult:
+    """Fill ``attributed_ws`` on ``spans`` from ``ledger``'s cells and
+    synthesize filler spans for un-spanned energy.  Idempotent: resets
+    previous attributions first."""
+    for sp in spans:
+        sp.attributed_ws = 0.0
+    by_node: dict = {}
+    for sp in spans:
+        by_node.setdefault(sp.node, []).append(sp)
+    result = AttributionResult(spans=list(spans))
+    for (node, tenant, phase), cell in sorted(ledger.cells.items()):
+        cands = _candidates(by_node, node, tenant, phase)
+        weights = [sp.tags.get("ws", 0.0) for sp in cands]
+        if not any(w > 0 for w in weights):
+            weights = [sp.seconds for sp in cands]
+        if not any(w > 0 for w in weights):
+            weights = [1.0] * len(cands)
+        total_w = sum(weights)
+        if not cands or total_w <= 0:
+            result.synthesized.append(Span(
+                name=f"unattributed:{phase}", node=node, t0=0.0,
+                t1=cell.seconds,
+                tags={"phase": phase, "tenant": tenant,
+                      "synthesized": True},
+                attributed_ws=cell.ws))
+            continue
+        handed = 0.0
+        for sp, w in zip(cands[:-1], weights[:-1]):
+            share = cell.ws * (w / total_w)
+            sp.attributed_ws += share
+            handed += share
+        # the last candidate takes the remainder: the cell conserves
+        # exactly, so per-node sums match the ledger to float-sum noise
+        cands[-1].attributed_ws += cell.ws - handed
+    return result

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models.model import Model
 from repro.parallel.sharding import ShardingRules
 from repro.telemetry.dvfs import LiveUtilization
@@ -70,6 +71,8 @@ class Request:
     energy_ws: float = 0.0      # attributed prefill+decode Watt*seconds
     prefill_ws: float = 0.0     # ... the prefill share of it
     decode_ws: float = 0.0      # ... the decode share of it
+    enq_t: Optional[float] = None   # host meter time at submit (queue-wait)
+    queue_wait_s: float = 0.0   # meter-time spent queued before each fill
 
 
 class ServeLoop:
@@ -115,8 +118,17 @@ class ServeLoop:
         self.pos = np.zeros(batch_slots, np.int32)
         self._decode = jax.jit(make_decode_step(model))
         self._tokens = np.zeros((batch_slots, 1), np.int32)
+        # observability: open request spans by rid + the coalesced idle
+        # span (one per idle stretch, not one per idle step)
+        self._req_spans: dict = {}
+        self._idle_span = None
 
     def submit(self, req: Request):
+        # stamp the enqueue on the meter's busy-time timeline (a peek,
+        # not a clock() call — the virtual tick clock must not advance);
+        # _fill_slots turns the gap into the request's queue-wait
+        if self.meter is not None:
+            req.enq_t = self.meter.now
         self.queue.append(req)
 
     @property
@@ -166,7 +178,22 @@ class ServeLoop:
             if req is not None:
                 self.active[i] = None
                 moved.append(req)
+        self._close_idle()
+        if self.meter is not None:
+            now = self.meter.now
+            for req in moved:
+                ent = self._req_spans.pop(req.rid, None)
+                if ent is not None:
+                    if "decode" in ent:
+                        ent["decode"].finish(now)
+                    ent["root"].tags["outcome"] = "migrated"
+                    ent["root"].finish(now)
         return moved
+
+    def _close_idle(self) -> None:
+        if self._idle_span is not None:
+            self._idle_span.finish()
+            self._idle_span = None
 
     def _record_util(self, phase: str, seconds: float, util: float) -> None:
         """Book the window's measured occupancy on the meter timeline
@@ -182,6 +209,28 @@ class ServeLoop:
             if self.active[i] is None and self.queue:
                 req = self.queue.pop(0)
                 self.active[i] = req
+                if self.meter is not None and req.enq_t is not None:
+                    # the fill ends this hop's queue-wait: both edges are
+                    # meter-time peeks, so the virtual clock never moves
+                    qw = max(self.meter.now - req.enq_t, 0.0)
+                    req.queue_wait_s += qw
+                    mx = obs.METRICS
+                    if mx.enabled:
+                        mx.histogram(
+                            "queue_wait_s",
+                            "meter-time queued before a slot").observe(qw)
+                    tr = obs.TRACER
+                    if tr.enabled:
+                        root = tr.begin("serve.request", node=self.node,
+                                        t0=req.enq_t,
+                                        tags={"rid": req.rid,
+                                              "tenant": req.tenant})
+                        tr.begin("serve.queue_wait", node=self.node,
+                                 t0=req.enq_t, parent=root,
+                                 tags={"rid": req.rid,
+                                       "tenant": req.tenant}
+                                 ).finish(self.meter.now)
+                        self._req_spans[req.rid] = {"root": root}
                 # teacher-forced sequential prefill through the decode path
                 # (single-slot prompts stay short in the examples; production
                 # prefill uses make_prefill on a full batch).  A migrated
@@ -198,10 +247,24 @@ class ServeLoop:
                     dt = self.clock() - t0
                     util = 1.0 / self.slots
                     self._record_util("prefill", dt, util)
+                    p0 = self.meter.now
                     ws = self.meter.observe(dt, util=util, phase="prefill",
                                             tenants=[req.tenant])
                     req.energy_ws += ws
                     req.prefill_ws += ws
+                    ent = self._req_spans.get(req.rid)
+                    if ent is not None:
+                        tr = obs.TRACER
+                        tr.begin("serve.prefill", node=self.node, t0=p0,
+                                 parent=ent["root"],
+                                 tags={"rid": req.rid, "tenant": req.tenant,
+                                       "phase": "prefill", "ws": ws}
+                                 ).finish(self.meter.now)
+                        ent["decode"] = tr.begin(
+                            "serve.decode", node=self.node,
+                            t0=self.meter.now, parent=ent["root"],
+                            tags={"rid": req.rid, "tenant": req.tenant,
+                                  "phase": "decode", "ws": 0.0})
                 self.pos[i] = len(seq) - 1
                 self._tokens[i, 0] = int(seq[-1])
 
@@ -231,8 +294,18 @@ class ServeLoop:
                 dt = max(now - self._t_mark, 0.0)
             self._t_mark = now
             self._record_util(IDLE_PHASE, dt, 0.0)
-            self.meter.observe(dt, util=0.0, phase=IDLE_PHASE,
-                               tenants=[INFRA_TENANT])
+            ws = self.meter.observe(dt, util=0.0, phase=IDLE_PHASE,
+                                    tenants=[INFRA_TENANT])
+            tr = obs.TRACER
+            if tr.enabled and dt > 0:
+                # coalesce: one span per idle stretch, extended each tick
+                t1 = self.meter.now
+                if self._idle_span is None:
+                    self._idle_span = tr.begin(
+                        "serve.idle", node=self.node, t0=t1 - dt,
+                        tags={"phase": IDLE_PHASE, "tenant": INFRA_TENANT,
+                              "ws": 0.0})
+                self._idle_span.extend(t1, ws=ws)
         self.steps_done += 1
         if self.governor is not None and self.meter is not None:
             self.governor.tick(self.meter, self.steps_done, node=self.node)
@@ -249,6 +322,7 @@ class ServeLoop:
         self._fill_slots()
         if all(r is None for r in self.active):
             return self._idle_step()
+        self._close_idle()
         participants = [r for r in self.active if r is not None]
         t0 = self.clock()
         pos = int(max(self.pos[i] for i, r in enumerate(self.active)
@@ -267,9 +341,20 @@ class ServeLoop:
             self._record_util("decode", dt, util)
             ws = self.meter.observe(dt, util=util, phase="decode",
                                     tenants=[r.tenant for r in participants])
+            share = ws / len(participants)
+            now_m = self.meter.now
+            mx, tr = obs.METRICS, obs.TRACER
             for r in participants:
-                r.energy_ws += ws / len(participants)
-                r.decode_ws += ws / len(participants)
+                r.energy_ws += share
+                r.decode_ws += share
+                if mx.enabled:
+                    mx.histogram("decode_ws_per_token",
+                                 "Ws billed per generated token"
+                                 ).observe(share)
+                if tr.enabled:
+                    ent = self._req_spans.get(r.rid)
+                    if ent is not None and "decode" in ent:
+                        ent["decode"].extend(now_m, ws=share)
         n_active = 0
         for i, req in enumerate(self.active):
             if req is None:
@@ -283,6 +368,13 @@ class ServeLoop:
                 req.done = True
                 self.active[i] = None
                 self.finished.append(req)
+                ent = self._req_spans.pop(req.rid, None)
+                if ent is not None and self.meter is not None:
+                    end = self.meter.now
+                    if "decode" in ent:
+                        ent["decode"].finish(end)
+                    ent["root"].tags["tokens"] = len(req.out)
+                    ent["root"].finish(end)
             else:
                 n_active += 1
         self.steps_done += 1
@@ -302,6 +394,7 @@ class ServeLoop:
             if not self.has_work:
                 break
             self.step()
+        self._close_idle()
         if self.governor is not None and self.meter is not None:
             # drain trailing un-flushed energy so the fleet ledger totals
             # match the meter at run end; govern=False keeps the partial

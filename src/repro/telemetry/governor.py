@@ -40,6 +40,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Optional
 
+from repro import obs
 from repro.telemetry.energy import (DEFAULT_NODE, DecodeEnergyMeter,
                                     EnergyLedger, drain_delta)
 
@@ -158,6 +159,11 @@ class PowerGovernor:
         window_ws, window_s = drain_delta(meter.ledger, self.ledger, snap,
                                           node,
                                           phases=self.policy.drift_phases)
+        tr = obs.TRACER
+        if tr.enabled:
+            tr.instant("governor.flush", node=node, t=meter.now,
+                       tags={"step": step, "window_ws": window_ws,
+                             "window_s": window_s, "govern": govern})
         if (window_s <= 0 and window_ws <= 0) or not govern:
             return None
         new_plan = self.monitor(node).observe(step, window_s, self.plan,
@@ -221,6 +227,12 @@ class PowerGovernor:
                 old_plan=self.plan.describe(), new_plan=p.plan.describe(),
                 applied=not reason, verify_rung=self.verify_rung or "",
                 reject_reason=reason))
+            tr = obs.TRACER
+            if tr.enabled:
+                tr.instant("governor.migrate", node=p.node,
+                           tags={"step": step, "applied": not reason,
+                                 "drift_ratio": p.drift_ratio,
+                                 "reject_reason": reason[:80]})
             if reason:
                 continue                # the real trial vetoed the estimate
             self.plan = p.plan

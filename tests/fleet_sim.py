@@ -7,7 +7,13 @@ jax — so scheduler policies (routing, admission, drift drains) and the
 hypothesis invariants can run thousands of fleet steps in milliseconds.
 Model-level behaviour (real prefill/decode, request resume through the
 cache) is covered by the ServeLoop tests in ``test_fleet.py``.
+
+Like the real loop, ``SimLoop`` emits per-window busy/idle spans tagged
+with their exact booked Ws when ``repro.obs`` tracing is enabled, so the
+joule-attribution invariants can run over arbitrary hypothesis-generated
+arrival scripts.
 """
+from repro import obs
 from repro.fleet.node import Node
 from repro.telemetry import ConstantSource, DecodeEnergyMeter, envelope_for
 
@@ -36,6 +42,9 @@ class SimLoop:
                                                and not self.parked)
 
     def submit(self, req) -> None:
+        # mirror ServeLoop.submit: stamp the enqueue on the meter's
+        # busy-time timeline so queue-wait is measurable
+        req.enq_t = self.meter.now
         self.queue.append(req)
 
     def park(self) -> None:
@@ -59,20 +68,45 @@ class SimLoop:
         if not self.parked:
             for i in range(self.slots):
                 if self.active[i] is None and self.queue:
-                    self.active[i] = self.queue.pop(0)
+                    req = self.queue.pop(0)
+                    self.active[i] = req
+                    if getattr(req, "enq_t", None) is not None:
+                        qw = max(self.meter.now - req.enq_t, 0.0)
+                        req.queue_wait_s += qw
+                        mx = obs.METRICS
+                        if mx.enabled:
+                            mx.histogram(
+                                "queue_wait_s",
+                                "meter-time queued before a slot"
+                            ).observe(qw)
         participants = [r for r in self.active if r is not None]
+        tr = obs.TRACER
+        node = getattr(self.meter, "node", "sim")
         if not participants:
             # mirror ServeLoop._idle_step: a powered loop with no work
             # books floor-watts idle Ws under the infra tenant
             from repro.telemetry import INFRA_TENANT
-            self.meter.observe(self.step_s, util=0.0, phase="idle",
-                               tenants=[INFRA_TENANT])
+            ws = self.meter.observe(self.step_s, util=0.0, phase="idle",
+                                    tenants=[INFRA_TENANT])
+            if tr.enabled:
+                tr.begin("sim.idle", node=node,
+                         t0=self.meter.now - self.step_s,
+                         tags={"phase": "idle", "tenant": INFRA_TENANT,
+                               "ws": 0.0}).extend(self.meter.now, ws=ws)
             self.steps_done += 1
             return 0
         ws = self.meter.observe(self.step_s,
                                 util=len(participants) / self.slots,
                                 phase="decode",
                                 tenants=[r.tenant for r in participants])
+        if tr.enabled:
+            share = ws / len(participants)
+            for req in participants:
+                tr.begin("sim.decode", node=node,
+                         t0=self.meter.now - self.step_s,
+                         tags={"phase": "decode", "tenant": req.tenant,
+                               "rid": req.rid, "ws": 0.0}
+                         ).extend(self.meter.now, ws=share)
         n_active = 0
         for i, req in enumerate(self.active):
             if req is None:

@@ -421,3 +421,42 @@ def test_stage_clock_prefers_psutil_and_keeps_fallback():
     # the sidecar stays loadable by the compiled rung's parser
     side = clock.sidecar()
     assert {"name", "t0", "t1", "util", "util_src"} <= set(side["stages"][0])
+
+
+# ---------------------------------------------------------------------------
+# Queue-wait accounting (observability satellite)
+# ---------------------------------------------------------------------------
+
+def test_request_behind_full_node_reports_queue_wait(tiny_model):
+    """A request stuck behind a full node must report its wait in the
+    ``serve.queue_wait`` span AND the ``queue_wait_s`` histogram — both
+    read the same enqueue stamp, so they must agree."""
+    from repro import obs
+    cfg, model, params = tiny_model
+    node = _serve_node("q", model, params, slots=1)
+    tracer, metrics = obs.enable()
+    try:
+        r0, r1 = _req(0, max_new=4), _req(1, max_new=4)
+        node.submit(r0)
+        node.submit(r1)
+        assert r0.enq_t is not None and r1.enq_t is not None
+        node.loop.run()
+        assert r0.done and r1.done
+        # the single slot serves r0 first; r1 waits a full generation
+        assert r0.queue_wait_s == pytest.approx(0.0)
+        assert r1.queue_wait_s > 0.0
+        waits = {sp.tags["rid"]: sp for sp in tracer.spans
+                 if sp.name == "serve.queue_wait"}
+        assert set(waits) == {0, 1}
+        assert waits[1].seconds == pytest.approx(r1.queue_wait_s)
+        # request root spans cover their queue-wait children
+        roots = {sp.tags["rid"]: sp for sp in tracer.spans
+                 if sp.name == "serve.request"}
+        assert roots[1].contains(waits[1])
+        assert waits[1].parent_id == roots[1].span_id
+        h = metrics.histogram("queue_wait_s")
+        assert h.count == 2
+        assert h.quantile(0.99) > 0.0
+        assert 'queue_wait_s{quantile="0.99"}' in metrics.to_prometheus()
+    finally:
+        obs.disable()

@@ -1,0 +1,355 @@
+"""Observability stack: spans, metrics, joule attribution, exporters.
+
+Unit coverage for ``repro.obs`` plus the deterministic jax-free
+acceptance run: the placement_tiny-style consolidate-and-gate fleet run
+under tracing must produce spans covering gate -> wake -> probation ->
+canary, per-node attributed Ws that sums to the ledger within 1e-6, and
+a Prometheus export carrying the ``queue_wait_s`` quantiles.
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from fleet_sim import sim_envelope_node
+from repro import obs
+from repro.fleet import (FleetPolicy, FleetPowerPlanner, FleetScheduler,
+                         PowerPlanPolicy, PowerStatePolicy)
+from repro.obs import (Histogram, MetricsRegistry, Span, Tracer,
+                       attribute_joules, read_chrome_trace,
+                       write_chrome_trace, write_spans_jsonl)
+from repro.serve.engine import Request
+from repro.telemetry import EnergyLedger
+
+SCRIPT = Path(__file__).resolve().parents[1] / "scripts" / "trace_report.py"
+TICK = 0.01
+
+
+def _req(rid, tenant="default", max_new=6):
+    return Request(rid=rid, prompt=np.full(3, 2, np.int32),
+                   max_new=max_new, tenant=tenant)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# Tracer / Span
+# ---------------------------------------------------------------------------
+
+def test_span_context_manager_nests_and_times():
+    tr = Tracer(clock=FakeClock())
+    with tr.span("outer") as outer:
+        with tr.span("inner") as inner:
+            pass
+        sibling = tr.begin("sibling", t0=outer.t0 + 0.5)
+        sibling.finish(outer.t0 + 0.7)
+    assert inner.parent_id == outer.span_id
+    assert sibling.parent_id == outer.span_id    # inherited from the stack
+    assert not outer.open and not inner.open
+    assert outer.contains(inner) and outer.contains(sibling)
+    assert outer.seconds >= inner.seconds
+
+
+def test_span_extend_accumulates_ws_and_finish_keeps_extent():
+    sp = Span(name="w", t0=1.0)
+    sp.extend(2.0, ws=0.25).extend(3.0, ws=0.25)
+    assert sp.tags["ws"] == pytest.approx(0.5)
+    sp.finish()                     # no t1: keep where extend left it
+    assert sp.t1 == 3.0 and sp.seconds == pytest.approx(2.0)
+    assert Span(name="z", t0=4.0).finish().seconds == 0.0
+
+
+def test_tracer_caps_spans_and_counts_drops():
+    tr = Tracer(clock=FakeClock(), maxlen=3)
+    for i in range(5):
+        tr.instant(f"e{i}")
+    assert len(tr.spans) == 3 and tr.dropped == 2
+
+
+def test_null_instruments_are_safe_and_disabled():
+    obs.disable()
+    assert not obs.TRACER.enabled and not obs.METRICS.enabled
+    with obs.TRACER.span("x") as sp:
+        obs.TRACER.instant("y")
+    assert sp.name == ""            # the shared dummy
+    obs.METRICS.counter("c").inc()
+    obs.METRICS.histogram("h").observe(1.0)
+    assert obs.METRICS.to_prometheus() == ""
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+def test_histogram_quantiles_interpolate_and_bound():
+    h = Histogram("lat", buckets=(1.0, 2.0, 4.0))
+    for v in (0.5, 1.5, 3.0, 100.0):
+        h.observe(v)
+    assert h.count == 4 and h.sum == pytest.approx(105.0)
+    assert h.quantile(0.0) <= h.quantile(0.5) <= h.quantile(1.0)
+    assert h.quantile(1.0) == 4.0   # +Inf clamps to the last finite bound
+
+
+def test_histogram_merge_is_exact_and_bounds_checked():
+    a, b = Histogram("x"), Histogram("x")
+    for v in (0.01, 0.2):
+        a.observe(v)
+    b.observe(5.0)
+    m = Histogram.merged(a, b)
+    assert m.count == 3 and m.sum == pytest.approx(5.21)
+    assert m.counts == [ca + cb for ca, cb in zip(a.counts, b.counts)]
+    with pytest.raises(ValueError):
+        a.merge(Histogram("y", buckets=(1.0, 2.0)))
+
+
+def test_registry_prometheus_text_has_buckets_and_quantiles():
+    mx = MetricsRegistry()
+    mx.counter("arrivals_total", "submits seen").inc(3)
+    mx.gauge("active_nodes").set(2)
+    h = mx.histogram("queue_wait_s", "queued seconds")
+    for v in (0.001, 0.02, 0.3):
+        h.observe(v)
+    text = mx.to_prometheus()
+    assert "# TYPE queue_wait_s histogram" in text
+    assert 'queue_wait_s_bucket{le="+Inf"} 3' in text
+    assert 'queue_wait_s{quantile="0.99"}' in text
+    assert "arrivals_total 3" in text and "active_nodes 2" in text
+    assert mx.to_json()["queue_wait_s"]["count"] == 3
+    with pytest.raises(TypeError):
+        mx.counter("queue_wait_s")      # kind mismatch
+
+
+# ---------------------------------------------------------------------------
+# Joule attribution
+# ---------------------------------------------------------------------------
+
+def test_attribution_distributes_by_ws_weight_and_conserves():
+    ledger = EnergyLedger()
+    ledger.add("decode", ws=3.0, seconds=1.0, node="n0", tenant="a")
+    spans = [Span(name="d1", node="n0", t0=0.0, t1=0.5,
+                  tags={"phase": "decode", "tenant": "a", "ws": 1.0}),
+             Span(name="d2", node="n0", t0=0.5, t1=1.0,
+                  tags={"phase": "decode", "tenant": "a", "ws": 2.0})]
+    result = attribute_joules(spans, ledger)
+    assert spans[0].attributed_ws == pytest.approx(1.0)
+    assert spans[1].attributed_ws == pytest.approx(2.0)
+    assert not result.synthesized
+    assert all(r["ok"] for r in result.conservation(ledger).values())
+
+
+def test_attribution_synthesizes_unattributed_cells():
+    ledger = EnergyLedger()
+    ledger.add("idle", ws=2.0, seconds=4.0, node="n1", tenant="fleet")
+    result = attribute_joules([], ledger)
+    (syn,) = result.synthesized
+    assert syn.name == "unattributed:idle" and syn.node == "n1"
+    assert syn.attributed_ws == pytest.approx(2.0)
+    assert syn.tags["synthesized"] is True
+    assert all(r["ok"] for r in result.conservation(ledger).values())
+
+
+def test_attribution_is_idempotent():
+    ledger = EnergyLedger()
+    ledger.add("decode", ws=1.5, seconds=1.0, node="n0", tenant="a")
+    spans = [Span(name="d", node="n0", t0=0.0, t1=1.0,
+                  tags={"phase": "decode", "tenant": "a"})]
+    attribute_joules(spans, ledger)
+    attribute_joules(spans, ledger)     # must reset, not double
+    assert spans[0].attributed_ws == pytest.approx(1.5)
+
+
+# ---------------------------------------------------------------------------
+# Exporters + the offline report CLI
+# ---------------------------------------------------------------------------
+
+def _sample_spans():
+    return [Span(name="serve.decode", node="n0", t0=0.0, t1=1.0, span_id=1,
+                 tags={"phase": "decode", "tenant": "a", "ws": 1.0},
+                 attributed_ws=1.25),
+            Span(name="serve.queue_wait", node="n0", t0=0.0, t1=0.25,
+                 span_id=2, parent_id=1, tags={"rid": 7}),
+            Span(name="power.gated", node="n1", t0=0.5, t1=2.0, span_id=3,
+                 tags={"phase": "idle", "tenant": "fleet"},
+                 attributed_ws=0.5)]
+
+
+def test_chrome_trace_roundtrip(tmp_path):
+    path = tmp_path / "trace.json"
+    write_chrome_trace(_sample_spans(), path)
+    doc = json.loads(path.read_text())
+    names = {e["args"]["name"] for e in doc["traceEvents"]
+             if e["ph"] == "M"}
+    assert names == {"n0", "n1"}
+    back = {sp.span_id: sp for sp in read_chrome_trace(path)}
+    assert len(back) == 3
+    assert back[1].node == "n0" and back[1].seconds == pytest.approx(1.0)
+    assert back[1].attributed_ws == pytest.approx(1.25)
+    assert back[2].parent_id == 1
+    assert back[3].tags["phase"] == "idle"
+
+
+def _report(*argv):
+    return subprocess.run(
+        [sys.executable, str(SCRIPT)] + list(argv),
+        capture_output=True, text=True)
+
+
+def test_trace_report_renders_both_formats(tmp_path):
+    chrome = tmp_path / "trace.json"
+    jsonl = tmp_path / "trace.spans.jsonl"
+    write_chrome_trace(_sample_spans(), chrome)
+    write_spans_jsonl(_sample_spans(), jsonl)
+    for path in (chrome, jsonl):
+        r = _report("--trace", str(path))
+        assert r.returncode == 0, r.stderr
+        assert "3 spans on 2 rows" in r.stdout
+        assert "serve.decode" in r.stdout
+        assert "attributed Ws by phase" in r.stdout
+    r = _report("--trace", str(jsonl), "--json")
+    assert r.returncode == 0
+    doc = json.loads(r.stdout)
+    assert doc["spans"] == 3 and doc["nodes"] == ["n0", "n1"]
+    assert doc["attributed_ws"] == pytest.approx(1.75)
+
+
+def test_trace_report_fails_on_missing_empty_and_spanless(tmp_path):
+    assert _report("--trace", str(tmp_path / "nope.json")).returncode != 0
+    empty = tmp_path / "empty.json"
+    empty.write_text("")
+    assert _report("--trace", str(empty)).returncode != 0
+    hollow = tmp_path / "hollow.json"
+    hollow.write_text('{"traceEvents": []}')
+    assert _report("--trace", str(hollow)).returncode != 0
+
+
+def test_power_report_fails_on_empty_trace(tmp_path):
+    script = SCRIPT.parent / "power_report.py"
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    r = subprocess.run([sys.executable, str(script),
+                        "--trace", str(empty)],
+                       capture_output=True, text=True)
+    assert r.returncode != 0 and "empty file" in r.stderr
+
+
+# ---------------------------------------------------------------------------
+# The deterministic jax-free acceptance run (placement_tiny shape)
+# ---------------------------------------------------------------------------
+
+def _gate_fleet(n=3):
+    nodes = [sim_envelope_node(f"n{i}", slots=2, step_s=TICK)
+             for i in range(n)]
+    planner = FleetPowerPlanner(policy=PowerPlanPolicy(
+        mode="gate", slo_queue_depth=4.0, plan_every=4, min_active=1,
+        min_active_steps=20, horizon_steps=32.0,
+        states=PowerStatePolicy(gate_watts=2.0, boot_energy_ws=1.0,
+                                warmup_steps=4, cooldown_steps=8)))
+    sched = FleetScheduler(
+        nodes, policy=FleetPolicy(flush_every=4, checkpoint_every=8,
+                                  migrate_on_drift=False),
+        planner=planner)
+    return nodes, sched
+
+
+def _diurnal_arrivals():
+    arrivals, rid = [], 0
+    for due in list(range(1, 9)) + list(range(160, 196, 3)):
+        arrivals.append((due, _req(rid, tenant=f"t{rid % 2}", max_new=8)))
+        rid += 1
+    return arrivals
+
+
+def test_traced_gate_run_covers_lifecycle_and_conserves_joules(tmp_path):
+    tracer, metrics = obs.enable()
+    try:
+        nodes, sched = _gate_fleet()
+        finished = sched.run(arrivals=_diurnal_arrivals(), max_steps=2000)
+        assert len(finished) == 20
+
+        names = {sp.name for sp in tracer.spans}
+        for needed in ("fleet.submit", "fleet.route", "fleet.step",
+                       "fleet.flush", "sim.decode", "sim.idle",
+                       "power.plan", "power.gated", "power.wake",
+                       "power.probation", "power.canary"):
+            assert needed in names, sorted(names)
+
+        # the canary span nests under its node's probation window
+        by_id = {sp.span_id: sp for sp in tracer.spans}
+        canaries = [sp for sp in tracer.spans if sp.name == "power.canary"]
+        assert canaries
+        for c in canaries:
+            parent = by_id[c.parent_id]
+            assert parent.name == "power.probation"
+            assert parent.node == c.node
+
+        # joule attribution conserves the ledger per node within 1e-6
+        result = attribute_joules(list(tracer.spans), sched.ledger)
+        rows = result.conservation(sched.ledger, tol=1e-6)
+        assert set(rows) == {n.name for n in nodes}
+        assert all(r["ok"] for r in rows.values()), rows
+        # the sim instruments every booking: nothing is synthesized
+        assert not result.synthesized
+
+        # the Prometheus export carries the serving histograms + counters
+        text = metrics.to_prometheus()
+        assert 'queue_wait_s{quantile="0.99"}' in text
+        assert "routing_candidates_bucket" in text
+        assert "placement_events_total" in text
+        assert "fleet_steps_total" in text
+
+        # ... and the whole thing renders offline through the report CLI
+        trace = tmp_path / "gate.json"
+        write_chrome_trace(result.all_spans(), trace)
+        prom = tmp_path / "gate.prom"
+        metrics.write_prometheus(prom)
+        r = _report("--trace", str(trace), "--metrics", str(prom))
+        assert r.returncode == 0, r.stderr
+        assert "attributed Ws by phase" in r.stdout
+        assert 'queue_wait_s{quantile="0.99"}' in r.stdout
+    finally:
+        obs.disable()
+
+
+# ---------------------------------------------------------------------------
+# Compiled-rung dry-run stage spans
+# ---------------------------------------------------------------------------
+
+def test_compiled_rung_emits_stage_spans():
+    from repro.configs import get_config
+    from repro.core.backends import CompiledBackend, MeasureContext
+    tracer, _ = obs.enable()
+    try:
+        backend = CompiledBackend(record_trace=False, interval=0.01)
+        ctx = MeasureContext(cfg=get_config("tiny-test"),
+                             shape_name="decode_32k")
+        rec = {"status": "OK", "collectives": {"total_bytes": 0.0},
+               "memory": {}, "mesh": "pod16x16"}
+        stages, t = [], 0.0
+        for name, dt in (("build", 0.5), ("compile", 2.0),
+                         ("analyze", 0.1)):
+            stages.append({"name": name, "t0": t, "t1": t + dt, "util": 1.0})
+            t += dt
+        m = backend.measurement_from_trial(ctx, rec, stages)
+        assert m.ok
+        row = "dryrun:tiny-test:decode_32k"
+        mine = [sp for sp in tracer.spans if sp.node == row]
+        root = next(sp for sp in mine if sp.name == "backend.compiled")
+        kids = [sp for sp in mine if sp.parent_id == root.span_id]
+        assert {sp.name for sp in kids} == {"dryrun.build",
+                                            "dryrun.compile",
+                                            "dryrun.analyze"}
+        assert all(root.contains(sp) for sp in kids)
+        assert root.seconds == pytest.approx(2.6)
+        assert root.tags["rung"] == "compiled"
+    finally:
+        obs.disable()

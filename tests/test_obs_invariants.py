@@ -1,0 +1,147 @@
+"""Property tests for the observability stack (needs hypothesis).
+
+Invariants the exporters and the joule-attribution join lean on:
+
+  * context-managed child spans always nest inside their parents,
+    whatever the tree shape and however the clock advances;
+  * histogram merge is associative and commutative (exact counts), and
+    the quantile estimator is monotone in ``q``;
+  * joule attribution conserves ``total_ws`` per node under arbitrary
+    hypothesis-generated arrival scripts over a traced gate-mode fleet.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev dep
+from hypothesis import given, settings, strategies as st
+
+from fleet_sim import sim_envelope_node
+from repro import obs
+from repro.fleet import (FleetPolicy, FleetPowerPlanner, FleetScheduler,
+                         PowerPlanPolicy, PowerStatePolicy)
+from repro.obs import Histogram, Tracer, attribute_joules
+from repro.serve.engine import Request
+
+TICK = 0.01
+
+
+def _req(rid, tenant="default", max_new=3):
+    return Request(rid=rid, prompt=np.full(3, 2, np.int32),
+                   max_new=max_new, tenant=tenant)
+
+
+# ---------------------------------------------------------------------------
+# Span nesting
+# ---------------------------------------------------------------------------
+
+_TREES = st.recursive(st.just([]),
+                      lambda kids: st.lists(kids, max_size=3),
+                      max_leaves=12)
+
+_STEPS = st.floats(min_value=0.0, max_value=10.0,
+                   allow_nan=False, allow_infinity=False)
+
+
+@settings(max_examples=100, deadline=None)
+@given(tree=_TREES, step=_STEPS)
+def test_context_managed_children_nest_inside_parents(tree, step):
+    t = [0.0]
+
+    def clock():
+        t[0] += step
+        return t[0]
+
+    tr = Tracer(clock=clock)
+
+    def walk(children):
+        for kids in children:
+            with tr.span("n"):
+                walk(kids)
+
+    with tr.span("root"):
+        walk(tree)
+    by_id = {sp.span_id: sp for sp in tr.spans}
+    assert all(not sp.open for sp in tr.spans)
+    for sp in tr.spans:
+        if sp.parent_id is not None:
+            assert by_id[sp.parent_id].contains(sp)
+
+
+# ---------------------------------------------------------------------------
+# Histogram merge + quantiles
+# ---------------------------------------------------------------------------
+
+_VALUES = st.lists(st.floats(min_value=0.0, max_value=1e3,
+                             allow_nan=False, allow_infinity=False),
+                   min_size=0, max_size=30)
+
+
+def _hist(values):
+    h = Histogram("h")
+    for v in values:
+        h.observe(v)
+    return h
+
+
+@settings(max_examples=100, deadline=None)
+@given(a=_VALUES, b=_VALUES, c=_VALUES)
+def test_histogram_merge_associative_commutative_exact(a, b, c):
+    whole = _hist(a + b + c)
+    left = Histogram.merged(Histogram.merged(_hist(a), _hist(b)), _hist(c))
+    right = Histogram.merged(_hist(a), Histogram.merged(_hist(b), _hist(c)))
+    flipped = Histogram.merged(_hist(b), _hist(a))
+    for m in (left, right):
+        assert m.counts == whole.counts
+        assert m.count == whole.count
+        assert m.sum == pytest.approx(whole.sum, rel=1e-9, abs=1e-9)
+    assert flipped.counts == Histogram.merged(_hist(a), _hist(b)).counts
+
+
+@settings(max_examples=100, deadline=None)
+@given(values=_VALUES,
+       qs=st.lists(st.floats(min_value=0.0, max_value=1.0,
+                             allow_nan=False),
+                   min_size=2, max_size=8))
+def test_histogram_quantiles_monotone_in_q(values, qs):
+    h = _hist(values)
+    estimates = [h.quantile(q) for q in sorted(qs)]
+    assert all(lo <= hi for lo, hi in zip(estimates, estimates[1:]))
+    assert all(e >= 0.0 for e in estimates)
+
+
+# ---------------------------------------------------------------------------
+# Joule attribution conservation under arbitrary arrival scripts
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(bursts=st.lists(st.tuples(
+    st.integers(min_value=0, max_value=200),      # burst start
+    st.integers(min_value=1, max_value=6)),       # burst size
+    min_size=1, max_size=4))
+def test_attribution_conserves_total_ws_under_any_script(bursts):
+    tracer, _ = obs.enable()
+    try:
+        nodes = [sim_envelope_node(f"n{i}", slots=2, step_s=TICK)
+                 for i in range(2)]
+        sched = FleetScheduler(
+            nodes, policy=FleetPolicy(flush_every=4, checkpoint_every=8,
+                                      migrate_on_drift=False),
+            planner=FleetPowerPlanner(policy=PowerPlanPolicy(
+                mode="gate", plan_every=4, min_active_steps=8,
+                states=PowerStatePolicy(gate_watts=2.0, boot_energy_ws=1.0,
+                                        warmup_steps=2, cooldown_steps=8))))
+        arrivals, rid = [], 0
+        for start, size in sorted(bursts):
+            for i in range(size):
+                arrivals.append((start + i, _req(rid, tenant=f"t{rid % 2}")))
+                rid += 1
+        sched.run(arrivals=arrivals, max_steps=600)
+        result = attribute_joules(list(tracer.spans), sched.ledger)
+        rows = result.conservation(sched.ledger, tol=1e-6)
+        assert rows and all(r["ok"] for r in rows.values()), rows
+        # every booking was instrumented: no synthesized filler spans
+        assert not result.synthesized
+        # attribution never invents energy on the fleet control row
+        assert result.attributed_by_node().get("fleet", 0.0) == 0.0
+    finally:
+        obs.disable()
