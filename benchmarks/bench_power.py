@@ -54,7 +54,18 @@ Six workloads through one ``WsComparison`` pipeline:
                       The Ws table carries the new ``idle``/
                       ``transition`` phases, and the report appends each
                       arm's placement summary (power states, queue-depth
-                      SLO held).
+                      SLO held).  The gate arm is re-run through the
+                      vectorized core (``repro.fleet.vector``) and the
+                      joule-for-joule equivalence verdict (max relative
+                      cell delta, event/finished match) lands in the
+                      report;
+  * ``fleet_scale`` — the scale rung the vector core exists for: a
+                      synthetic exponential arrival stream (default 100k
+                      requests, ``REPRO_BENCH_FLEET_ARRIVALS``) over a
+                      large consolidate-and-gate fleet (default 256
+                      nodes, ``REPRO_BENCH_FLEET_NODES``), reporting
+                      simulated arrivals/sec — the perf trajectory
+                      ``BENCH_fleet.json`` tracks.
 
 ``run()`` also leaves the structured comparisons in ``LAST_REPORT`` so the
 harness's ``--json-out`` can persist the numbers as a machine-readable
@@ -75,7 +86,8 @@ from repro.core.power import R740_ARRIA10
 from repro.core.verifier import Verifier
 from repro.fleet import (AdmissionController, FleetPolicy, FleetPowerPlanner,
                          FleetScheduler, Node, PowerPlanPolicy,
-                         PowerStatePolicy)
+                         PowerStatePolicy, VectorArrivals, VectorFleet,
+                         VectorNodeSpec)
 from repro.kernels import ref
 from repro.models.model import Model
 from repro.serve.engine import Request, ServeLoop
@@ -338,6 +350,117 @@ def _placement_serve(mode: str):
     return sched, finished, time.perf_counter() - t0, len(arrivals)
 
 
+def _vector_placement_twin(mode: str):
+    """The ``placement_tiny`` arm re-run through ``repro.fleet.vector``.
+
+    Rebuilds the arrival metadata from the script recipe instead of
+    reusing the object run's ``Request``s — those were mutated in place
+    (tokens appended, energy billed) by the reference run."""
+    tick = 0.004
+    env = node_envelope(R740_ARRIA10, accelerated=True)
+    specs = [VectorNodeSpec(f"pod{i}", env, slots=2, step_s=tick,
+                            max_seq=64) for i in range(3)]
+    ppol = PowerPlanPolicy(
+        mode=mode, slo_queue_depth=4.0, plan_every=4, min_active=1,
+        min_active_steps=20, horizon_steps=32.0,
+        states=PowerStatePolicy(gate_watts=3.0, boot_energy_ws=2.0,
+                                warmup_steps=4, cooldown_steps=8))
+    vec = VectorFleet(specs,
+                      policy=FleetPolicy(flush_every=4, checkpoint_every=8,
+                                         migrate_on_drift=False),
+                      plan=ppol, loop_model="serve")
+    dues = list(range(1, 9)) + list(range(160, 196, 3))
+    arr = VectorArrivals(due=dues,
+                         tenant_idx=[i % 2 for i in range(len(dues))],
+                         prompt_len=[5] * len(dues),
+                         max_new=[8] * len(dues),
+                         tenant_names=["team0", "team1"])
+    finished = vec.run(arr, max_steps=2000)
+    return vec, finished
+
+
+def _vector_equivalence(sched, finished, vec, fin_rids,
+                        rtol: float = 1e-6) -> dict:
+    """The joule-for-joule verdict: reference ledger vs vector ledger,
+    placement-event sequence, finished-request set."""
+    a, b = sched.ledger, vec.ledger
+    total_rel = abs(a.total_ws - b.total_ws) / max(abs(a.total_ws), 1e-12)
+    cells_match = set(a.cells) == set(b.cells)
+    worst = 0.0
+    if cells_match:
+        for key, ca in a.cells.items():
+            cb = b.cells[key]
+            worst = max(worst,
+                        abs(ca.ws - cb.ws) / max(abs(ca.ws), 1e-12))
+            if ca.count != cb.count:
+                cells_match = False
+    ev_a = [(e.step, e.node, e.action, tuple(e.moved_rids))
+            for e in sched.planner.events]
+    ev_b = [(e.step, e.node, e.action, tuple(e.moved_rids))
+            for e in vec.events]
+    finished_match = sorted(r.rid for r in finished) == list(fin_rids)
+    return {"engine": "vector",
+            "total_ws_object": a.total_ws,
+            "total_ws_vector": b.total_ws,
+            "total_ws_rel_delta": total_rel,
+            "max_rel_cell_delta": worst,
+            "cells": len(a.cells),
+            "cells_match": cells_match,
+            "events_match": ev_a == ev_b,
+            "finished_match": finished_match,
+            "ok": bool(cells_match and ev_a == ev_b and finished_match
+                       and total_rel <= rtol and worst <= rtol)}
+
+
+def _fleet_scale():
+    """The scale workload: a large synthetic stream through the vector
+    core under consolidate-and-gate, timed for simulated arrivals/sec."""
+    n_nodes = int(os.environ.get("REPRO_BENCH_FLEET_NODES", "256"))
+    n_arrivals = int(os.environ.get("REPRO_BENCH_FLEET_ARRIVALS",
+                                    "100000"))
+    env = node_envelope(R740_ARRIA10, accelerated=True)
+    specs = [VectorNodeSpec(f"pod{i:04d}", env, slots=4, step_s=0.004,
+                            max_seq=64) for i in range(n_nodes)]
+    ppol = PowerPlanPolicy(
+        mode="gate", slo_queue_depth=4.0, plan_every=16,
+        min_active=max(n_nodes // 8, 1), min_active_steps=32,
+        horizon_steps=64.0,
+        states=PowerStatePolicy(gate_watts=3.0, boot_energy_ws=2.0,
+                                warmup_steps=4, cooldown_steps=8))
+    arrivals = VectorArrivals.synth(n_arrivals, tenants=4,
+                                    mean_gap_steps=0.02, prompt_len=(4, 12),
+                                    max_new=8, seed=7)
+    vec = VectorFleet(specs,
+                      policy=FleetPolicy(flush_every=8, checkpoint_every=16,
+                                         migrate_on_drift=False),
+                      plan=ppol, loop_model="serve")
+    t0 = time.perf_counter()
+    finished = vec.run(arrivals, max_steps=200_000)
+    wall = time.perf_counter() - t0
+    _record_metrics("fleet_scale", vec, wall, n_arrivals)
+    LAST_METRICS[-1]["metrics"]["nodes"] = n_nodes
+    LAST_METRICS[-1]["metrics"]["arrivals"] = n_arrivals
+    summary = vec.summary()
+    doc = {"workload": "fleet_scale", "engine": "vector",
+           "nodes": n_nodes, "arrivals": n_arrivals,
+           "finished": len(finished), "steps": vec.steps,
+           "wall_seconds": wall,
+           "arrivals_per_sec": n_arrivals / max(wall, 1e-9),
+           "total_ws": vec.total_ws,
+           "placement_events": len(vec.events),
+           "states": summary["placement"]["states"]}
+    gates = sum(1 for e in vec.events if e.action == "gate")
+    wakes = sum(1 for e in vec.events if e.action == "wake")
+    lines = [f"fleet_scale[vector]: {n_arrivals} arrivals over "
+             f"{n_nodes} nodes in {wall:.2f}s wall "
+             f"({doc['arrivals_per_sec']:,.0f} simulated arrivals/sec, "
+             f"{vec.steps} fleet steps, {len(finished)} finished)",
+             f"fleet_scale[vector]: total {vec.total_ws:.1f}Ws, "
+             f"{len(vec.events)} placement events "
+             f"({gates} gates, {wakes} wakes)"]
+    return lines, doc
+
+
 def _placement_comparison():
     """Always-on vs consolidate-and-gate over the same diurnal script."""
     sched_on, fin_on, _, _ = _placement_serve("always_on")
@@ -357,9 +480,19 @@ def _placement_comparison():
             f"placement[{label}]: states={p['states']} "
             f"max_queue_depth={p['max_queue_depth']} "
             f"(SLO {p['slo_queue_depth']:g}) events={events}")
+    vec, fin_rids = _vector_placement_twin("gate")
+    equiv = _vector_equivalence(sched_gate, fin_gate, vec, fin_rids)
+    extra.append(
+        f"placement[gate] vector equivalence: "
+        f"{'OK' if equiv['ok'] else 'MISMATCH'} "
+        f"(total {equiv['total_ws_vector']:.4f}Ws vs "
+        f"{equiv['total_ws_object']:.4f}Ws, "
+        f"max cell delta {equiv['max_rel_cell_delta']:.2e} rel, "
+        f"events_match={equiv['events_match']})")
     doc = cmp_.to_dict()
     doc["placement"] = {"always_on": sched_on.summary(),
-                        "gate": sched_gate.summary()}
+                        "gate": sched_gate.summary(),
+                        "vector_equivalence": equiv}
     return cmp_, extra, doc
 
 
@@ -380,10 +513,12 @@ def run() -> list[str]:
     comparisons.append(fleet_cmp)
     place_cmp, place_extra, place_doc = _placement_comparison()
     comparisons.append(place_cmp)
+    scale_lines, scale_doc = _fleet_scale()
     LAST_REPORT.clear()
     LAST_REPORT.extend(c.to_dict() for c in comparisons[:-2])
     LAST_REPORT.append(fleet_doc)
     LAST_REPORT.append(place_doc)
+    LAST_REPORT.append(scale_doc)
     for cmp_ in comparisons:
         lines.extend(render_comparison_csv(cmp_))
         lines.extend(render_comparison_text(cmp_))
@@ -392,6 +527,8 @@ def run() -> list[str]:
         if cmp_ is place_cmp:
             lines.extend(place_extra)
         lines.append("")
+    lines.extend(scale_lines)
+    lines.append("")
     lines.append(f"# {len(comparisons)} Ws comparisons "
                  f"in {time.time()-t0:.1f}s")
     return lines

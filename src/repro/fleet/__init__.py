@@ -31,4 +31,6 @@ from repro.fleet.power import (ArrivalForecaster,  # noqa: F401
                                PlacementEvent, PowerPlanPolicy,
                                PowerStatePolicy)
 from repro.fleet.scheduler import (FleetEvent, FleetPolicy,  # noqa: F401
-                                   FleetScheduler)
+                                   FleetScheduler, normalize_arrivals)
+from repro.fleet.vector import (VectorArrivals, VectorFleet,  # noqa: F401
+                                VectorNodeSpec)

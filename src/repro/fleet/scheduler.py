@@ -38,6 +38,7 @@ touch the device.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -52,6 +53,40 @@ ROUTERS = ("energy", "round_robin")
 #: routing fan-out is small-integer-valued: give its histogram bounds
 #: that resolve single-node candidate sets
 _CANDIDATE_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0)
+
+
+def normalize_arrivals(arrivals: Optional[list],
+                       arrival_every: int = 1) -> list:
+    """Normalize a ``run()`` arrival script to a due-sorted
+    ``[(due_step, Request), ...]`` list.
+
+    Two input shapes are accepted, never mixed:
+
+      * bare ``Request``s — paced one per ``arrival_every`` fleet steps,
+        so the i-th request is due at step ``i * max(arrival_every, 1)``
+        (exactly the cadence the paced dispatch loop used to produce);
+      * ``(due_step, Request)`` pairs — submitted at the first fleet
+        step >= ``due_step``.  The list is stably sorted by due step, so
+        same-step arrivals keep their submission order and an unsorted
+        script cannot head-block later-but-earlier-due requests.
+
+    A mixed list raises: the two shapes imply different pacing semantics
+    and silently switching between them per-element was a bug.
+    """
+    if not arrivals:
+        return []
+    timed = [isinstance(a, tuple) for a in arrivals]
+    if all(timed):
+        pairs = list(arrivals)
+    elif not any(timed):
+        pace = max(arrival_every, 1)
+        pairs = [(i * pace, req) for i, req in enumerate(arrivals)]
+    else:
+        raise ValueError(
+            "mixed arrival semantics: pass either bare Requests (paced by "
+            "arrival_every) or (due_step, Request) pairs, not both")
+    pairs.sort(key=lambda p: p[0])
+    return pairs
 
 
 @dataclass(frozen=True)
@@ -180,9 +215,15 @@ class FleetScheduler:
                 chosen = candidates[self._rr % len(candidates)]
                 self._rr += 1
             else:
+                # clamp non-finite predictions (a drifted/NaN source) to
+                # +inf: NaN compares False against everything, which would
+                # make the min ordering arbitrary — a broken node must
+                # lose ties deterministically instead
+                def cost(n):
+                    m = n.marginal_ws_per_token()
+                    return m if math.isfinite(m) else float("inf")
                 chosen = min(candidates,
-                             key=lambda n: (n.marginal_ws_per_token(),
-                                            n.load, n.name))
+                             key=lambda n: (cost(n), n.load, n.name))
         tr = obs.TRACER
         if tr.enabled:
             tr.instant("fleet.route",
@@ -382,17 +423,19 @@ class FleetScheduler:
         submitted at the first fleet step >= ``due_step``, which is how
         a bursty/diurnal script leaves real *troughs* — the fleet keeps
         stepping (booking idle floors, letting the power planner gate)
-        while no request is due."""
-        queue = list(arrivals) if arrivals else []
+        while no request is due.  ``normalize_arrivals`` turns both
+        shapes into one due-sorted stream at entry (mixed lists raise),
+        and dispatch walks it with a cursor — O(1) per arrival, where
+        ``list.pop(0)`` made million-arrival scripts quadratic."""
+        queue = normalize_arrivals(arrivals, arrival_every)
         n0 = {n.name: len(n.loop.finished) for n in self.nodes}
+        idx = 0
         for _ in range(max_steps):
-            if not queue and not self.has_work:
+            if idx >= len(queue) and not self.has_work:
                 break
-            if queue and isinstance(queue[0], tuple):
-                while queue and queue[0][0] <= self.steps:
-                    self.submit(queue.pop(0)[1])
-            elif queue and self.steps % max(arrival_every, 1) == 0:
-                self.submit(queue.pop(0))
+            while idx < len(queue) and queue[idx][0] <= self.steps:
+                self.submit(queue[idx][1])
+                idx += 1
             self.step()
         self.flush(govern=False)            # complete the fleet ledger
         # the partial tail window is booked but never judged: a later

@@ -42,7 +42,8 @@ from repro.configs import get_config
 from repro.core.adapt import ReconfigPolicy, Reconfigurator
 from repro.core.ga import GAConfig
 from repro.fleet import (AdmissionController, FleetPolicy, FleetPowerPlanner,
-                         FleetScheduler, Node, PowerPlanPolicy)
+                         FleetScheduler, Node, PowerPlanPolicy,
+                         VectorArrivals, VectorFleet, VectorNodeSpec)
 from repro.models.model import Model
 from repro.serve.engine import Request
 from repro.telemetry import (GovernorPolicy, PowerGovernor, WsBudget,
@@ -98,6 +99,120 @@ def build_governor(cfg, args, node: str) -> PowerGovernor:
         verify_rung=args.verify_rung)
 
 
+def run_vector(args) -> None:
+    """``--engine vector``: the same fleet/placement/admission surface
+    through ``repro.fleet.vector`` — no model, no params, no jax decode;
+    token values never exist, only the joule account.  The arrival
+    script (rng prompt lengths, tenant cycling, diurnal dues) replays
+    the exact recipe the object engine serves, so the two engines are
+    A/B-comparable run for run."""
+    from repro.core.power import V5E
+    from repro.telemetry import envelope_for
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    tenants = [t.strip() for t in args.tenants.split(",") if t.strip()] \
+        or ["default"]
+    rng = np.random.default_rng(0)
+    if args.diurnal:
+        dues = parse_diurnal(args.diurnal)
+    elif args.arrival_every > 0:
+        dues = [i * args.arrival_every for i in range(args.requests)]
+    else:
+        dues = [0] * args.requests
+    plens = []
+    for _ in dues:
+        plen = int(rng.integers(4, 12))
+        rng.integers(2, cfg.vocab_size, size=plen)   # keep the rng
+        plens.append(plen)                           # stream aligned
+    arrivals = VectorArrivals(
+        due=dues,
+        tenant_idx=[i % len(tenants) for i in range(len(dues))],
+        prompt_len=plens,
+        max_new=[args.max_new] * len(dues),
+        tenant_names=tenants)
+
+    env = envelope_for(V5E)
+    specs = [VectorNodeSpec(f"{args.node}{i}", env, slots=args.slots,
+                            step_s=args.tick, max_seq=args.max_seq)
+             for i in range(max(args.fleet, 1))]
+    admission = None
+    if args.admission:
+        admission = AdmissionController(
+            parse_budgets(args.admission, args.admission_window))
+    plan = None
+    if args.placement:
+        plan = PowerPlanPolicy(mode=args.placement,
+                               slo_queue_depth=args.slo_queue_depth)
+    vec = VectorFleet(specs,
+                      policy=FleetPolicy(flush_every=args.flush_every,
+                                         checkpoint_every=args.checkpoint_every,
+                                         router=args.router,
+                                         migrate_on_drift=False),
+                      plan=plan, admission=admission, loop_model="serve")
+    t0 = time.time()
+    finished = vec.run(arrivals)
+    wall = time.time() - t0
+
+    if admission is not None:
+        for rej in admission.rejections:
+            print(f"req {rej.rid}: tenant={rej.tenant} THROTTLED @step "
+                  f"{rej.step} ({rej.reason})")
+    rows = vec.results()
+    n_tok = sum(r["tokens"] for r in rows if r["finished"])
+    for r in rows:
+        if not r["finished"]:
+            continue
+        print(f"req {r['rid']}: tenant={r['tenant']} node={r['node']} "
+              f"({r['tokens']} tokens) {r['prefill_ws']:.3f}Ws prefill + "
+              f"{r['decode_ws']:.3f}Ws decode")
+    print(f"\nserved {len(finished)} requests, {n_tok} tokens in "
+          f"{wall:.2f}s simulated on {vec.n} nodes ({vec.steps} fleet "
+          f"steps, router={args.router}, engine=vector)")
+    for line in render_rollups(vec.ledger, label="fleet[vector]"):
+        print(line)
+    summary = vec.summary()
+    for d in summary["nodes"]:
+        print(f"node {d['name']}: served={d['served']} "
+              f"{d['total_ws']:.2f}Ws parked={d['parked']}")
+    if plan is not None:
+        for ev in vec.events:
+            print(f"placement {ev.action} @step {ev.step}: {ev.node} "
+                  f"(rate={ev.rate:.3f}/step, "
+                  f"Lq={ev.queue_depth_est:.2f}, "
+                  f"keep {ev.active_target} nodes) {ev.reason}")
+        p = summary["placement"]
+        print(f"placement[{args.placement}]: states={p['states']} "
+              f"max_queue_depth={p['max_queue_depth']} "
+              f"(SLO {args.slo_queue_depth:g})")
+    if admission is not None:
+        for tenant, row in summary["admission"].items():
+            print(f"admission {tenant}: spent {row['spent_ws']:.2f}Ws of "
+                  f"{row['budget_ws']:.2f}Ws, rejected {row['rejected']} "
+                  f"submits (0.00Ws booked)")
+    if args.ledger_out:
+        print(f"ledger -> {vec.ledger.to_json(args.ledger_out)}")
+    if args.trace_spans:
+        from pathlib import Path
+        result = obs.attribute_joules(list(obs.TRACER.spans), vec.ledger)
+        for node_name, row in sorted(
+                result.conservation(vec.ledger).items()):
+            flag = "ok" if row["ok"] else "DRIFT"
+            print(f"attribution {node_name}: ledger {row['ledger_ws']:.4f}Ws "
+                  f"attributed {row['attributed_ws']:.4f}Ws "
+                  f"(delta {row['delta']:+.2e}) {flag}")
+        spans_out = str(Path(args.trace_spans).with_suffix(".spans.jsonl"))
+        print(f"spans  -> "
+              f"{obs.write_chrome_trace(result.all_spans(), args.trace_spans)}"
+              f" (+ {obs.write_spans_jsonl(result.all_spans(), spans_out)})")
+        if obs.TRACER.dropped:
+            print(f"spans  dropped {obs.TRACER.dropped} past the tracer cap")
+    if args.metrics_out:
+        print(f"metrics -> {obs.METRICS.write_prometheus(args.metrics_out)}")
+        h = obs.METRICS.histogram("queue_wait_s")
+        print("queue_wait_s " + " ".join(
+            f"p{int(q * 100)}={h.quantile(q):.4f}s" for q in obs.QUANTILES))
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tiny-test")
@@ -108,6 +223,15 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--fleet", type=int, default=1,
                     help="number of serving nodes under the scheduler")
+    ap.add_argument("--engine", default="object",
+                    choices=("object", "vector"),
+                    help="fleet core: the object-level reference "
+                         "(ServeLoop per node, real jax decode) or the "
+                         "vectorized repro.fleet.vector core (numpy node "
+                         "arrays, joule-equivalent by contract, no model)")
+    ap.add_argument("--tick", type=float, default=0.004,
+                    help="vector engine: virtual TickClock seconds per "
+                         "decode/prefill/idle window")
     ap.add_argument("--node", default="node",
                     help="node label prefix (node0..nodeN-1)")
     ap.add_argument("--router", default="energy",
@@ -167,8 +291,19 @@ def main() -> None:
                          "text exposition here")
     args = ap.parse_args()
 
+    if args.engine == "vector":
+        for flag, name in ((args.govern, "--govern"),
+                           (args.trace_out, "--trace-out"),
+                           (args.verify_rung, "--verify-rung")):
+            if flag:
+                ap.error(f"{name} is object-engine only (per-node "
+                         f"governors and power traces need the object "
+                         f"loops) — drop it or use --engine object")
     if args.trace_spans or args.metrics_out:
         obs.enable()
+    if args.engine == "vector":
+        run_vector(args)
+        return
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = Model(cfg)

@@ -1,0 +1,311 @@
+"""The vectorized fleet core vs the object-level reference.
+
+The contract under test (docs/fleet_scale.md): on one arrival script the
+vector core reproduces the reference fleet's joule account — total Ws,
+every (node, tenant, phase) cell, the placement-event sequence, the
+finished-request set — not approximately, but within 1e-6 relative (in
+practice bit-exact, since the float arithmetic is replicated op-for-op).
+Plus the scheduler-side satellites this PR rode in on: O(1) arrival
+dispatch with explicit mixed-script rejection, the router's non-finite
+clamp, and the run()-boundary drift-window reset.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from fleet_sim import sim_envelope_node, sim_node
+from repro import obs
+from repro.core.power import R740_ARRIA10, V5E
+from repro.fleet import (AdmissionController, FleetPolicy, FleetPowerPlanner,
+                         FleetScheduler, PowerPlanPolicy, PowerStatePolicy,
+                         VectorArrivals, VectorFleet, VectorNodeSpec,
+                         normalize_arrivals)
+from repro.serve.engine import Request
+from repro.telemetry import (TickClock, WsBudget, envelope_for,
+                             node_envelope)
+
+TICK = 0.01
+
+
+def _req(rid, max_new=4, tenant="default", plen=3):
+    return Request(rid=rid, prompt=np.full(plen, 2, np.int32),
+                   max_new=max_new, tenant=tenant)
+
+
+def _script():
+    return [(due, _req(rid, max_new=3 + rid % 3,
+                       tenant=f"team{rid % 2}"))
+            for rid, due in enumerate(list(range(0, 12))
+                                      + list(range(80, 104, 3)))]
+
+
+def assert_ledger_close(a, b, rtol=1e-6):
+    assert abs(a.total_ws - b.total_ws) <= rtol * max(abs(a.total_ws), 1e-9)
+    assert set(a.cells) == set(b.cells)
+    for key, ca in a.cells.items():
+        cb = b.cells[key]
+        assert ca.count == cb.count, (key, ca.count, cb.count)
+        assert abs(ca.ws - cb.ws) <= rtol * max(abs(ca.ws), 1e-9), key
+        assert abs(ca.seconds - cb.seconds) <= \
+            rtol * max(abs(ca.seconds), 1e-9), key
+
+
+def _sim_pair(planned=False, router="energy", admission=None):
+    """One (object, vector) fleet pair over the same 3-node config."""
+    policy = FleetPolicy(flush_every=4, checkpoint_every=8, router=router,
+                         migrate_on_drift=False)
+    ppol = PowerPlanPolicy(
+        mode="gate", slo_queue_depth=2.0, plan_every=4, min_active=1,
+        min_active_steps=8, horizon_steps=32.0,
+        states=PowerStatePolicy(gate_watts=3.0, boot_energy_ws=2.0,
+                                warmup_steps=4, cooldown_steps=8)) \
+        if planned else None
+    nodes = [sim_envelope_node(f"n{i}", slots=2, step_s=TICK)
+             for i in range(3)]
+    sched = FleetScheduler(
+        nodes, policy=policy,
+        planner=FleetPowerPlanner(policy=ppol) if planned else None,
+        admission=admission[0] if admission else None)
+    env = envelope_for(V5E)
+    specs = [VectorNodeSpec(f"n{i}", env, slots=2, step_s=TICK)
+             for i in range(3)]
+    vec = VectorFleet(specs, policy=policy, plan=ppol,
+                      admission=admission[1] if admission else None,
+                      loop_model="sim")
+    return sched, vec
+
+
+# -- the tentpole: joule-for-joule equivalence ----------------------------
+
+def test_sim_equivalence_with_placement():
+    sched, vec = _sim_pair(planned=True)
+    fin_obj = sched.run(arrivals=_script(), max_steps=2000)
+    fin_vec = vec.run(_script(), max_steps=2000)
+    assert sorted(r.rid for r in fin_obj) == fin_vec
+    assert_ledger_close(sched.ledger, vec.ledger)
+    ev_obj = [(e.step, e.node, e.action, tuple(e.moved_rids))
+              for e in sched.planner.events]
+    ev_vec = [(e.step, e.node, e.action, tuple(e.moved_rids))
+              for e in vec.events]
+    assert ev_obj == ev_vec
+    assert any(e[2] == "gate" for e in ev_obj)   # the scenario gated
+    assert {r.rid: len(r.out) for r in fin_obj} == \
+        {r["rid"]: r["tokens"] for r in vec.results() if r["finished"]}
+
+
+def test_sim_equivalence_with_admission():
+    budgets = lambda: {"team0": WsBudget(budget_ws=5.0, window_steps=0)}  # noqa: E731
+    adm_obj = AdmissionController(budgets())
+    adm_vec = AdmissionController(budgets())
+    sched, vec = _sim_pair(admission=(adm_obj, adm_vec))
+    fin_obj = sched.run(arrivals=_script(), max_steps=2000)
+    fin_vec = vec.run(_script(), max_steps=2000)
+    assert sorted(r.rid for r in fin_obj) == fin_vec
+    assert_ledger_close(sched.ledger, vec.ledger)
+    assert [r.rid for r in adm_obj.rejections] == \
+        [r.rid for r in adm_vec.rejections]
+    assert adm_obj.rejections, "budget never tripped - weak scenario"
+
+
+def test_serve_equivalence_placement_tiny():
+    """The acceptance criterion: the vector core vs the real jax
+    ServeLoop fleet on a placement_tiny-shaped diurnal script, within
+    1e-6 relative on every cell (expected: bit-exact)."""
+    jax = pytest.importorskip("jax")
+    from repro.configs import get_config
+    from repro.fleet import Node
+    from repro.models.model import Model
+
+    cfg = get_config("tiny-test")
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tick = 0.004
+    env = node_envelope(R740_ARRIA10, accelerated=True)
+    nodes = [Node.build(f"pod{i}", model, params, slots=2, max_seq=64,
+                        eos_id=-1, envelope=env, clock=TickClock(tick),
+                        nominal_step_s=tick) for i in range(3)]
+    ppol = PowerPlanPolicy(
+        mode="gate", slo_queue_depth=4.0, plan_every=4, min_active=1,
+        min_active_steps=20, horizon_steps=32.0,
+        states=PowerStatePolicy(gate_watts=3.0, boot_energy_ws=2.0,
+                                warmup_steps=4, cooldown_steps=8))
+    sched = FleetScheduler(
+        nodes, policy=FleetPolicy(flush_every=4, checkpoint_every=8,
+                                  migrate_on_drift=False),
+        planner=FleetPowerPlanner(policy=ppol))
+    rng = np.random.default_rng(0)
+    dues = list(range(1, 7)) + list(range(120, 138, 3))
+    arrivals = []
+    for rid, due in enumerate(dues):
+        prompt = rng.integers(2, cfg.vocab_size, size=5).astype(np.int32)
+        arrivals.append((due, Request(rid=rid, prompt=prompt, max_new=6,
+                                      tenant=f"team{rid % 2}")))
+    fin_obj = sched.run(arrivals=arrivals, max_steps=2000)
+
+    specs = [VectorNodeSpec(f"pod{i}", env, slots=2, step_s=tick,
+                            max_seq=64) for i in range(3)]
+    vec = VectorFleet(specs,
+                      policy=FleetPolicy(flush_every=4, checkpoint_every=8,
+                                         migrate_on_drift=False),
+                      plan=ppol, loop_model="serve")
+    arr = VectorArrivals(due=dues,
+                         tenant_idx=[i % 2 for i in range(len(dues))],
+                         prompt_len=[5] * len(dues),
+                         max_new=[6] * len(dues),
+                         tenant_names=["team0", "team1"])
+    fin_vec = vec.run(arr, max_steps=2000)
+    assert sorted(r.rid for r in fin_obj) == fin_vec
+    assert_ledger_close(sched.ledger, vec.ledger, rtol=1e-6)
+    assert [(e.step, e.node, e.action, tuple(e.moved_rids))
+            for e in sched.planner.events] == \
+        [(e.step, e.node, e.action, tuple(e.moved_rids))
+         for e in vec.events]
+    assert {r.rid: len(r.out) for r in fin_obj} == \
+        {r["rid"]: r["tokens"] for r in vec.results() if r["finished"]}
+
+
+# -- satellites: scheduler bug fixes --------------------------------------
+
+def test_route_clamps_nonfinite_marginal():
+    """A NaN power prediction must lose ties deterministically: before
+    the clamp, min() over a NaN-first candidate list kept the broken
+    node (NaN compares False against everything)."""
+    broken = sim_node("broken", watts=float("nan"), slots=2, step_s=TICK)
+    ok = sim_node("ok", watts=40.0, slots=2, step_s=TICK)
+    assert math.isnan(broken.marginal_ws_per_token())
+    sched = FleetScheduler([broken, ok],
+                           policy=FleetPolicy(migrate_on_drift=False))
+    chosen = sched.route(_req(0))
+    assert chosen.name == "ok"
+    vec = VectorFleet([VectorNodeSpec("broken", envelope_for(V5E), slots=2,
+                                      step_s=TICK,
+                                      source_watts=float("nan")),
+                       VectorNodeSpec("ok", envelope_for(V5E), slots=2,
+                                      step_s=TICK, source_watts=40.0)],
+                      policy=FleetPolicy(migrate_on_drift=False),
+                      loop_model="sim")
+    fin = vec.run([(0, _req(0))], max_steps=50)
+    assert fin == [0]
+    assert vec.results()[0]["node"] == "ok"
+
+
+def test_mixed_arrival_scripts_rejected():
+    with pytest.raises(ValueError, match="mixed arrival semantics"):
+        normalize_arrivals([(1, _req(0)), _req(1)])
+    sched = FleetScheduler([sim_envelope_node("n0", step_s=TICK)],
+                           policy=FleetPolicy(migrate_on_drift=False))
+    with pytest.raises(ValueError, match="mixed arrival semantics"):
+        sched.run(arrivals=[(1, _req(0)), _req(1)])
+    with pytest.raises(ValueError, match="mixed arrival semantics"):
+        VectorArrivals.from_requests([_req(0), (2, _req(1))])
+
+
+def test_paced_arrivals_normalize_to_timed():
+    """Bare Requests paced by arrival_every are exactly the explicit
+    (i * pace, req) script — one semantics, two spellings."""
+    def run(arrivals, every=1):
+        sched = FleetScheduler(
+            [sim_envelope_node(f"n{i}", step_s=TICK) for i in range(2)],
+            policy=FleetPolicy(migrate_on_drift=False))
+        fin = sched.run(arrivals=arrivals, arrival_every=every,
+                        max_steps=500)
+        return sched, fin
+
+    bare = [_req(i, max_new=3) for i in range(7)]
+    timed = [(3 * i, _req(i, max_new=3)) for i in range(7)]
+    s_bare, f_bare = run(bare, every=3)
+    s_timed, f_timed = run(timed)
+    assert sorted(r.rid for r in f_bare) == sorted(r.rid for r in f_timed)
+    assert_ledger_close(s_bare.ledger, s_timed.ledger, rtol=1e-9)
+    pairs = normalize_arrivals([_req(1), _req(0)], arrival_every=2)
+    assert [(due, r.rid) for due, r in pairs] == [(0, 1), (2, 0)]
+    assert normalize_arrivals(None) == []
+
+
+def test_consecutive_runs_reset_tail_drift_window():
+    """run() flushes the tail window and zeroes the accumulators, so a
+    second script starts with a clean drift account."""
+    sched = FleetScheduler(
+        [sim_envelope_node(f"n{i}", step_s=TICK) for i in range(2)],
+        policy=FleetPolicy(flush_every=4, migrate_on_drift=False))
+    sched.run(arrivals=[_req(i) for i in range(5)], arrival_every=3,
+              max_steps=500)
+    assert all(acc == (0.0, 0.0) for acc in sched._window_acc.values())
+    total_1 = sched.ledger.total_ws
+    fin2 = sched.run(arrivals=[_req(10 + i) for i in range(5)],
+                     arrival_every=3, max_steps=500)
+    assert [r.rid for r in fin2] == list(range(10, 15))
+    assert all(acc == (0.0, 0.0) for acc in sched._window_acc.values())
+    assert sched.ledger.total_ws > total_1
+
+
+# -- vector-core guardrails and scale -------------------------------------
+
+def test_vector_rejects_object_only_policies():
+    spec = VectorNodeSpec("n0", envelope_for(V5E))
+    with pytest.raises(ValueError, match="drift migration"):
+        VectorFleet([spec], policy=FleetPolicy(migrate_on_drift=True))
+    with pytest.raises(ValueError, match="loop_model"):
+        VectorFleet([spec], loop_model="warp")
+    with pytest.raises(ValueError, match="unique"):
+        VectorFleet([spec, spec])
+
+
+def test_vector_run_is_single_shot():
+    vec = VectorFleet([VectorNodeSpec("n0", envelope_for(V5E),
+                                      step_s=TICK)],
+                      policy=FleetPolicy(migrate_on_drift=False),
+                      loop_model="sim")
+    vec.run([(0, _req(0))], max_steps=50)
+    with pytest.raises(RuntimeError, match="single-shot"):
+        vec.run([(0, _req(1))])
+
+
+def test_fleet_scale_smoke():
+    """A scaled-down fleet_scale: the synthetic stream drains, every
+    request finishes, the planner acts, and the account stays sane."""
+    env = node_envelope(R740_ARRIA10, accelerated=True)
+    specs = [VectorNodeSpec(f"pod{i:02d}", env, slots=4, step_s=0.004,
+                            max_seq=64) for i in range(16)]
+    ppol = PowerPlanPolicy(
+        mode="gate", slo_queue_depth=4.0, plan_every=16, min_active=2,
+        min_active_steps=32, horizon_steps=64.0,
+        states=PowerStatePolicy(gate_watts=3.0, boot_energy_ws=2.0,
+                                warmup_steps=4, cooldown_steps=8))
+    arr = VectorArrivals.synth(2000, tenants=4, mean_gap_steps=0.5,
+                               max_new=8, seed=7)
+    vec = VectorFleet(specs,
+                      policy=FleetPolicy(flush_every=8, checkpoint_every=16,
+                                         migrate_on_drift=False),
+                      plan=ppol, loop_model="serve")
+    fin = vec.run(arr, max_steps=20_000)
+    assert len(fin) == 2000
+    assert vec.steps < 20_000, "stream never drained"
+    assert vec.total_ws > 0.0
+    assert vec.events, "the planner never consolidated"
+    roll = vec.ledger.rollup("phase")
+    assert abs(sum(pe.ws for pe in roll.values()) - vec.total_ws) \
+        <= 1e-6 * vec.total_ws
+
+
+def test_vector_obs_edges_aggregate_and_conserve():
+    """Tracing a vector run yields per-(node, phase) spans whose
+    attributed joules conserve per node, and the run-level counters
+    carry the aggregate totals."""
+    obs.enable()
+    try:
+        vec = VectorFleet(
+            [VectorNodeSpec(f"n{i}", envelope_for(V5E), slots=2,
+                            step_s=TICK) for i in range(2)],
+            policy=FleetPolicy(migrate_on_drift=False), loop_model="sim")
+        fin = vec.run(_script(), max_steps=2000)
+        assert fin
+        result = obs.attribute_joules(list(obs.TRACER.spans), vec.ledger)
+        for row in result.conservation(vec.ledger).values():
+            assert row["ok"], row
+        assert obs.METRICS.counter("arrivals_total").value == len(_script())
+        assert obs.METRICS.counter("fleet_steps_total").value == vec.steps
+        assert obs.METRICS.histogram("queue_wait_s").count > 0
+    finally:
+        obs.disable()

@@ -1,0 +1,111 @@
+"""Property tests driving both fleet cores from one arrival script
+(needs hypothesis).
+
+The generalization of the ledger-conservation invariants: whatever the
+script — arbitrary due steps, tenants, request sizes, either router,
+with or without the consolidate-and-gate planner — the object-level
+``FleetScheduler`` (SimLoop nodes) and the vectorized ``VectorFleet``
+(sim loop model) must agree on total Ws, every tenant rollup, the
+finished-request set and its token counts; and each core's own ledger
+must conserve (every rollup cut sums to ``total_ws``).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev dep
+from hypothesis import given, settings, strategies as st
+
+from fleet_sim import sim_envelope_node
+from repro.fleet import (FleetPolicy, FleetPowerPlanner, FleetScheduler,
+                         PowerPlanPolicy, PowerStatePolicy, VectorFleet,
+                         VectorNodeSpec)
+from repro.core.power import V5E
+from repro.serve.engine import Request
+from repro.telemetry import envelope_for
+
+TICK = 0.01
+
+_SCRIPT = st.lists(
+    st.tuples(st.integers(min_value=0, max_value=60),    # due step
+              st.integers(min_value=0, max_value=2),     # tenant
+              st.integers(min_value=1, max_value=6)),    # max_new
+    min_size=1, max_size=30)
+
+
+def _build_script(raw):
+    return [(due, Request(rid=rid, prompt=np.full(3, 2, np.int32),
+                          max_new=max_new, tenant=f"team{tenant}"))
+            for rid, (due, tenant, max_new) in enumerate(raw)]
+
+
+def _run_both(raw, n_nodes, slots, router, planned):
+    policy = FleetPolicy(flush_every=4, checkpoint_every=8, router=router,
+                         migrate_on_drift=False)
+    ppol = PowerPlanPolicy(
+        mode="gate", slo_queue_depth=2.0, plan_every=4, min_active=1,
+        min_active_steps=8, horizon_steps=32.0,
+        states=PowerStatePolicy(gate_watts=3.0, boot_energy_ws=2.0,
+                                warmup_steps=4, cooldown_steps=8)) \
+        if planned else None
+    nodes = [sim_envelope_node(f"n{i}", slots=slots, step_s=TICK)
+             for i in range(n_nodes)]
+    sched = FleetScheduler(
+        nodes, policy=policy,
+        planner=FleetPowerPlanner(policy=ppol) if planned else None)
+    fin_obj = sched.run(arrivals=_build_script(raw), max_steps=3000)
+
+    env = envelope_for(V5E)
+    specs = [VectorNodeSpec(f"n{i}", env, slots=slots, step_s=TICK)
+             for i in range(n_nodes)]
+    vec = VectorFleet(specs, policy=policy, plan=ppol, loop_model="sim")
+    fin_vec = vec.run(_build_script(raw), max_steps=3000)
+    return sched, fin_obj, vec, fin_vec
+
+
+def _assert_equivalent(sched, fin_obj, vec, fin_vec, rtol=1e-9):
+    assert sorted(r.rid for r in fin_obj) == fin_vec
+    assert {r.rid: len(r.out) for r in fin_obj} == \
+        {r["rid"]: r["tokens"] for r in vec.results() if r["finished"]}
+    a, b = sched.ledger, vec.ledger
+    assert abs(a.total_ws - b.total_ws) <= rtol * max(abs(a.total_ws), 1e-9)
+    ra, rb = a.rollup("tenant"), b.rollup("tenant")
+    assert set(ra) == set(rb)
+    for tenant, pa in ra.items():
+        pb = rb[tenant]
+        assert abs(pa.ws - pb.ws) <= rtol * max(abs(pa.ws), 1e-9), tenant
+        assert pa.count == pb.count, tenant
+
+
+def _assert_conserves(ledger, rtol=1e-9):
+    total = ledger.total_ws
+    for cut in ("node", "tenant", "phase"):
+        cut_sum = sum(pe.ws for pe in ledger.rollup(cut).values())
+        assert abs(cut_sum - total) <= rtol * max(abs(total), 1e-9), cut
+
+
+@settings(max_examples=40, deadline=None)
+@given(raw=_SCRIPT,
+       n_nodes=st.integers(min_value=1, max_value=4),
+       slots=st.integers(min_value=1, max_value=3),
+       router=st.sampled_from(["energy", "round_robin"]))
+def test_cores_agree_without_planner(raw, n_nodes, slots, router):
+    sched, fin_obj, vec, fin_vec = _run_both(raw, n_nodes, slots, router,
+                                             planned=False)
+    _assert_equivalent(sched, fin_obj, vec, fin_vec)
+    _assert_conserves(sched.ledger)
+    _assert_conserves(vec.ledger)
+
+
+@settings(max_examples=25, deadline=None)
+@given(raw=_SCRIPT,
+       n_nodes=st.integers(min_value=2, max_value=4))
+def test_cores_agree_under_consolidate_and_gate(raw, n_nodes):
+    sched, fin_obj, vec, fin_vec = _run_both(raw, n_nodes, 2, "energy",
+                                             planned=True)
+    _assert_equivalent(sched, fin_obj, vec, fin_vec)
+    assert [(e.step, e.node, e.action, tuple(e.moved_rids))
+            for e in sched.planner.events] == \
+        [(e.step, e.node, e.action, tuple(e.moved_rids))
+         for e in vec.events]
+    _assert_conserves(sched.ledger)
+    _assert_conserves(vec.ledger)
