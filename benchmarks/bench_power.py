@@ -59,13 +59,28 @@ Six workloads through one ``WsComparison`` pipeline:
                       joule-for-joule equivalence verdict (max relative
                       cell delta, event/finished match) lands in the
                       report;
-  * ``fleet_scale`` — the scale rung the vector core exists for: a
-                      synthetic exponential arrival stream (default 100k
-                      requests, ``REPRO_BENCH_FLEET_ARRIVALS``) over a
-                      large consolidate-and-gate fleet (default 256
-                      nodes, ``REPRO_BENCH_FLEET_NODES``), reporting
-                      simulated arrivals/sec — the perf trajectory
-                      ``BENCH_fleet.json`` tracks.
+  * ``fleet_scale`` — the scale rung the vector core exists for: one
+                      seeded diurnal stream (default 20k requests,
+                      ``REPRO_BENCH_FLEET_ARRIVALS``) over a large
+                      consolidate-and-gate fleet (default 1024 nodes,
+                      ``REPRO_BENCH_FLEET_NODES``) run through every
+                      vector engine — the stepped reference loop
+                      (``vector``), the segment-batched core
+                      (``vector-seg``) and, when jax is importable, the
+                      jax booking backend (``vector-jax``) — reporting
+                      simulated arrivals/sec per arm, the segment/stepped
+                      speedup, and the cross-engine joule-equivalence
+                      verdict.  The segment arm is the perf trajectory
+                      ``BENCH_fleet.json`` tracks
+                      (``scripts/perf_gate.py`` gates regressions);
+  * ``fleet_diurnal_1m``
+                    — the 10^6-arrival rung: a full simulated day of
+                      diurnal traffic (24h x 2000 steps/hour, default
+                      10^6 arrivals, ``REPRO_BENCH_FLEET_1M_ARRIVALS``)
+                      over 1024 nodes on the segment engine, with the
+                      per-hour consolidation curve (arrivals, powered
+                      nodes, gates/wakes) reconstructed from the
+                      placement-event stream.
 
 ``run()`` also leaves the structured comparisons in ``LAST_REPORT`` so the
 harness's ``--json-out`` can persist the numbers as a machine-readable
@@ -86,8 +101,9 @@ from repro.core.power import R740_ARRIA10
 from repro.core.verifier import Verifier
 from repro.fleet import (AdmissionController, FleetPolicy, FleetPowerPlanner,
                          FleetScheduler, Node, PowerPlanPolicy,
-                         PowerStatePolicy, VectorArrivals, VectorFleet,
-                         VectorNodeSpec)
+                         PowerStatePolicy, SegmentFleet, VectorArrivals,
+                         VectorFleet, VectorNodeSpec)
+from repro.fleet.jax_backend import HAVE_JAX
 from repro.kernels import ref
 from repro.models.model import Model
 from repro.serve.engine import Request, ServeLoop
@@ -350,7 +366,27 @@ def _placement_serve(mode: str):
     return sched, finished, time.perf_counter() - t0, len(arrivals)
 
 
-def _vector_placement_twin(mode: str):
+def _vector_engines() -> list[str]:
+    """The vector-core engines every equivalence verdict covers: the
+    stepped reference loop, the segment-batched core, and — when jax is
+    importable — the segment core with the jax booking backend."""
+    engines = ["vector", "vector-seg"]
+    if HAVE_JAX:
+        engines.append("vector-jax")
+    return engines
+
+
+def _build_vector_fleet(engine: str, specs, *, policy, plan, admission=None,
+                        loop_model="serve"):
+    kw = dict(policy=policy, plan=plan, admission=admission,
+              loop_model=loop_model)
+    if engine == "vector":
+        return VectorFleet(specs, **kw)
+    backend = "jax" if engine == "vector-jax" else "numpy"
+    return SegmentFleet(specs, backend=backend, **kw)
+
+
+def _vector_placement_twin(mode: str, engine: str = "vector"):
     """The ``placement_tiny`` arm re-run through ``repro.fleet.vector``.
 
     Rebuilds the arrival metadata from the script recipe instead of
@@ -365,10 +401,11 @@ def _vector_placement_twin(mode: str):
         min_active_steps=20, horizon_steps=32.0,
         states=PowerStatePolicy(gate_watts=3.0, boot_energy_ws=2.0,
                                 warmup_steps=4, cooldown_steps=8))
-    vec = VectorFleet(specs,
-                      policy=FleetPolicy(flush_every=4, checkpoint_every=8,
-                                         migrate_on_drift=False),
-                      plan=ppol, loop_model="serve")
+    vec = _build_vector_fleet(
+        engine, specs,
+        policy=FleetPolicy(flush_every=4, checkpoint_every=8,
+                           migrate_on_drift=False),
+        plan=ppol, loop_model="serve")
     dues = list(range(1, 9)) + list(range(160, 196, 3))
     arr = VectorArrivals(due=dues,
                          tenant_idx=[i % 2 for i in range(len(dues))],
@@ -380,7 +417,8 @@ def _vector_placement_twin(mode: str):
 
 
 def _vector_equivalence(sched, finished, vec, fin_rids,
-                        rtol: float = 1e-6) -> dict:
+                        rtol: float = 1e-6,
+                        engine: str = "vector") -> dict:
     """The joule-for-joule verdict: reference ledger vs vector ledger,
     placement-event sequence, finished-request set."""
     a, b = sched.ledger, vec.ledger
@@ -399,7 +437,7 @@ def _vector_equivalence(sched, finished, vec, fin_rids,
     ev_b = [(e.step, e.node, e.action, tuple(e.moved_rids))
             for e in vec.events]
     finished_match = sorted(r.rid for r in finished) == list(fin_rids)
-    return {"engine": "vector",
+    return {"engine": engine,
             "total_ws_object": a.total_ws,
             "total_ws_vector": b.total_ws,
             "total_ws_rel_delta": total_rel,
@@ -412,52 +450,196 @@ def _vector_equivalence(sched, finished, vec, fin_rids,
                        and total_rel <= rtol and worst <= rtol)}
 
 
-def _fleet_scale():
-    """The scale workload: a large synthetic stream through the vector
-    core under consolidate-and-gate, timed for simulated arrivals/sec."""
-    n_nodes = int(os.environ.get("REPRO_BENCH_FLEET_NODES", "256"))
-    n_arrivals = int(os.environ.get("REPRO_BENCH_FLEET_ARRIVALS",
-                                    "100000"))
+def _scale_fleet(engine: str, n_nodes: int):
+    """One consolidate-and-gate fleet at scale: slots=4, 4ms tick, plan
+    every 16 steps, gating that actually pays (small boot energy) so the
+    diurnal trough really consolidates."""
     env = node_envelope(R740_ARRIA10, accelerated=True)
     specs = [VectorNodeSpec(f"pod{i:04d}", env, slots=4, step_s=0.004,
                             max_seq=64) for i in range(n_nodes)]
     ppol = PowerPlanPolicy(
         mode="gate", slo_queue_depth=4.0, plan_every=16,
-        min_active=max(n_nodes // 8, 1), min_active_steps=32,
+        min_active=max(n_nodes // 128, 1), min_active_steps=64,
         horizon_steps=64.0,
         states=PowerStatePolicy(gate_watts=3.0, boot_energy_ws=2.0,
-                                warmup_steps=4, cooldown_steps=8))
-    arrivals = VectorArrivals.synth(n_arrivals, tenants=4,
-                                    mean_gap_steps=0.02, prompt_len=(4, 12),
-                                    max_new=8, seed=7)
-    vec = VectorFleet(specs,
-                      policy=FleetPolicy(flush_every=8, checkpoint_every=16,
-                                         migrate_on_drift=False),
-                      plan=ppol, loop_model="serve")
-    t0 = time.perf_counter()
-    finished = vec.run(arrivals, max_steps=200_000)
-    wall = time.perf_counter() - t0
-    _record_metrics("fleet_scale", vec, wall, n_arrivals)
+                                warmup_steps=8, cooldown_steps=32))
+    return _build_vector_fleet(
+        engine, specs,
+        policy=FleetPolicy(flush_every=8, checkpoint_every=16,
+                           migrate_on_drift=False),
+        plan=ppol)
+
+
+def _arm_equivalence(ref, vec, rtol: float = 1e-6) -> dict:
+    """Cross-engine verdict at scale: stepped reference ledger/events vs
+    a segment-batched arm — same contract as the placement_tiny twin."""
+    a, b = ref.ledger, vec.ledger
+    total_rel = abs(a.total_ws - b.total_ws) / max(abs(a.total_ws), 1e-12)
+    cells_match = set(a.cells) == set(b.cells)
+    worst = 0.0
+    if cells_match:
+        for key, ca in a.cells.items():
+            cb = b.cells[key]
+            worst = max(worst,
+                        abs(ca.ws - cb.ws) / max(abs(ca.ws), 1e-12))
+            if ca.count != cb.count:
+                cells_match = False
+    ev = ([(e.step, e.node, e.action, tuple(e.moved_rids))
+           for e in ref.events]
+          == [(e.step, e.node, e.action, tuple(e.moved_rids))
+              for e in vec.events])
+    return {"total_ws_rel_delta": total_rel,
+            "max_rel_cell_delta": worst,
+            "cells_match": cells_match, "events_match": ev,
+            "ok": bool(cells_match and ev and total_rel <= rtol
+                       and worst <= rtol)}
+
+
+def _fleet_scale():
+    """The scale workload: the same seeded diurnal stream through every
+    vector engine — the stepped reference loop vs the segment-batched
+    core (numpy and, when installed, jax booking) — timed for simulated
+    arrivals/sec, with the cross-engine joule-equivalence verdict."""
+    n_nodes = int(os.environ.get("REPRO_BENCH_FLEET_NODES", "1024"))
+    n_arrivals = int(os.environ.get("REPRO_BENCH_FLEET_ARRIVALS", "20000"))
+    engines = [e for e in
+               os.environ.get("REPRO_BENCH_FLEET_ENGINES",
+                              ",".join(_vector_engines())).split(",")
+               if e]
+    arrivals = VectorArrivals.diurnal(n_arrivals, tenants=4, hours=24,
+                                      steps_per_hour=2000, max_new=8,
+                                      seed=7)
+    lines, arms, fleets = [], {}, {}
+    for engine in engines:
+        vec = _scale_fleet(engine, n_nodes)
+        t0 = time.perf_counter()
+        finished = vec.run(arrivals, max_steps=60_000)
+        wall = time.perf_counter() - t0
+        fleets[engine] = vec
+        gates = sum(1 for e in vec.events if e.action == "gate")
+        wakes = sum(1 for e in vec.events if e.action == "wake")
+        arms[engine] = {
+            "engine": engine, "finished": len(finished),
+            "steps": vec.steps, "wall_seconds": wall,
+            "arrivals_per_sec": n_arrivals / max(wall, 1e-9),
+            "total_ws": vec.total_ws,
+            "placement_events": len(vec.events),
+            "gates": gates, "wakes": wakes}
+        lines.append(
+            f"fleet_scale[{engine}]: {n_arrivals} arrivals over "
+            f"{n_nodes} nodes in {wall:.2f}s wall "
+            f"({arms[engine]['arrivals_per_sec']:,.0f} simulated "
+            f"arrivals/sec, {vec.steps} fleet steps, "
+            f"{len(finished)} finished, {len(vec.events)} events)")
+    # the trajectory metric tracks the segment core (the scale vehicle);
+    # fall back to whatever arm ran when engines were restricted
+    lead = "vector-seg" if "vector-seg" in arms else engines[0]
+    _record_metrics("fleet_scale", fleets[lead],
+                    arms[lead]["wall_seconds"], n_arrivals)
     LAST_METRICS[-1]["metrics"]["nodes"] = n_nodes
     LAST_METRICS[-1]["metrics"]["arrivals"] = n_arrivals
-    summary = vec.summary()
-    doc = {"workload": "fleet_scale", "engine": "vector",
+    LAST_METRICS[-1]["metrics"]["engine"] = lead
+    states = list(fleets[lead].summary()["placement"]["states"].values())
+    doc = {"workload": "fleet_scale", "engine": lead,
+           "nodes": n_nodes, "arrivals": n_arrivals,
+           "engines": arms, "equivalence": {},
+           "states": {s: states.count(s) for s in sorted(set(states))}}
+    for key in ("finished", "steps", "wall_seconds", "arrivals_per_sec",
+                "total_ws", "placement_events"):
+        doc[key] = arms[lead][key]
+    if "vector" in arms:
+        for engine in engines:
+            if engine == "vector":
+                continue
+            equiv = _arm_equivalence(fleets["vector"], fleets[engine])
+            doc["equivalence"][engine] = equiv
+            lines.append(
+                f"fleet_scale[{engine}] vs stepped: "
+                f"{'OK' if equiv['ok'] else 'MISMATCH'} "
+                f"(total {equiv['total_ws_rel_delta']:.2e} rel, "
+                f"max cell {equiv['max_rel_cell_delta']:.2e} rel, "
+                f"events_match={equiv['events_match']})")
+        if "vector-seg" in arms:
+            speedup = (arms["vector-seg"]["arrivals_per_sec"]
+                       / max(arms["vector"]["arrivals_per_sec"], 1e-9))
+            doc["speedup_seg_vs_stepped"] = speedup
+            LAST_METRICS[-1]["metrics"]["speedup_seg_vs_stepped"] = speedup
+            LAST_METRICS[-1]["metrics"]["arrivals_per_sec_stepped"] = \
+                arms["vector"]["arrivals_per_sec"]
+            lines.append(f"fleet_scale: segment core "
+                         f"{speedup:.2f}x the stepped reference")
+    return lines, doc
+
+
+def _fleet_diurnal_1m():
+    """The 10^6-arrival rung: a full simulated day (24h x 2000 steps/h)
+    of diurnal traffic over a 1024-node consolidate-and-gate fleet,
+    segment engine only — the stepped loop would take tens of minutes.
+    The report carries the per-hour consolidation curve (arrivals,
+    powered nodes, gates/wakes per hour) reconstructed from the
+    placement-event stream."""
+    n_nodes = int(os.environ.get("REPRO_BENCH_FLEET_1M_NODES", "1024"))
+    n_arrivals = int(os.environ.get("REPRO_BENCH_FLEET_1M_ARRIVALS",
+                                    "1000000"))
+    steps_per_hour = 2000
+    engine = "vector-seg"
+    arrivals = VectorArrivals.diurnal(n_arrivals, tenants=4, hours=24,
+                                      steps_per_hour=steps_per_hour,
+                                      max_new=8, seed=11)
+    vec = _scale_fleet("vector-seg", n_nodes)
+    t0 = time.perf_counter()
+    finished = vec.run(arrivals, max_steps=80_000)
+    wall = time.perf_counter() - t0
+    _record_metrics("fleet_diurnal_1m", vec, wall, n_arrivals)
+    LAST_METRICS[-1]["metrics"]["nodes"] = n_nodes
+    LAST_METRICS[-1]["metrics"]["arrivals"] = n_arrivals
+    # per-hour consolidation curve: replay the power transitions
+    # (gate/regate power a node off, wake powers it back on; probe and
+    # admit are probation bookkeeping on an already-powered node)
+    # against the all-powered start state, sampling each hour boundary
+    due = np.asarray(arrivals.due, np.int64)
+    gated: set = set()
+    events = sorted(vec.events, key=lambda e: e.step)
+    ei, curve = 0, []
+    for hour in range(24):
+        end = (hour + 1) * steps_per_hour
+        gates = wakes = 0
+        while ei < len(events) and events[ei].step <= end:
+            if events[ei].action in ("gate", "regate"):
+                gated.add(events[ei].node)
+                gates += 1
+            elif events[ei].action == "wake":
+                gated.discard(events[ei].node)
+                wakes += 1
+            ei += 1
+        curve.append({"hour": hour,
+                      "arrivals": int(((due >= hour * steps_per_hour)
+                                       & (due < end)).sum()),
+                      "powered_nodes": n_nodes - len(gated),
+                      "gates": gates, "wakes": wakes})
+    doc = {"workload": "fleet_diurnal_1m", "engine": engine,
            "nodes": n_nodes, "arrivals": n_arrivals,
            "finished": len(finished), "steps": vec.steps,
            "wall_seconds": wall,
            "arrivals_per_sec": n_arrivals / max(wall, 1e-9),
            "total_ws": vec.total_ws,
            "placement_events": len(vec.events),
-           "states": summary["placement"]["states"]}
-    gates = sum(1 for e in vec.events if e.action == "gate")
-    wakes = sum(1 for e in vec.events if e.action == "wake")
-    lines = [f"fleet_scale[vector]: {n_arrivals} arrivals over "
+           "hourly": curve}
+    trough = min(curve, key=lambda r: r["powered_nodes"])
+    lines = [f"fleet_diurnal_1m[{engine}]: {n_arrivals} arrivals over "
              f"{n_nodes} nodes in {wall:.2f}s wall "
              f"({doc['arrivals_per_sec']:,.0f} simulated arrivals/sec, "
              f"{vec.steps} fleet steps, {len(finished)} finished)",
-             f"fleet_scale[vector]: total {vec.total_ws:.1f}Ws, "
-             f"{len(vec.events)} placement events "
-             f"({gates} gates, {wakes} wakes)"]
+             f"fleet_diurnal_1m[{engine}]: total {vec.total_ws:.1f}Ws, "
+             f"{len(vec.events)} placement events; trough hour "
+             f"{trough['hour']} ran {trough['powered_nodes']}/{n_nodes} "
+             f"nodes powered"]
+    lines.append("fleet_diurnal_1m hourly curve "
+                 "(hour: arrivals, powered, gates/wakes): "
+                 + "; ".join(f"{r['hour']}: {r['arrivals']}, "
+                             f"{r['powered_nodes']}, "
+                             f"{r['gates']}/{r['wakes']}"
+                             for r in curve))
     return lines, doc
 
 
@@ -480,19 +662,24 @@ def _placement_comparison():
             f"placement[{label}]: states={p['states']} "
             f"max_queue_depth={p['max_queue_depth']} "
             f"(SLO {p['slo_queue_depth']:g}) events={events}")
-    vec, fin_rids = _vector_placement_twin("gate")
-    equiv = _vector_equivalence(sched_gate, fin_gate, vec, fin_rids)
-    extra.append(
-        f"placement[gate] vector equivalence: "
-        f"{'OK' if equiv['ok'] else 'MISMATCH'} "
-        f"(total {equiv['total_ws_vector']:.4f}Ws vs "
-        f"{equiv['total_ws_object']:.4f}Ws, "
-        f"max cell delta {equiv['max_rel_cell_delta']:.2e} rel, "
-        f"events_match={equiv['events_match']})")
+    verdicts = []
+    for engine in _vector_engines():
+        vec, fin_rids = _vector_placement_twin("gate", engine)
+        equiv = _vector_equivalence(sched_gate, fin_gate, vec, fin_rids,
+                                    engine=engine)
+        verdicts.append(equiv)
+        extra.append(
+            f"placement[gate] {engine} equivalence: "
+            f"{'OK' if equiv['ok'] else 'MISMATCH'} "
+            f"(total {equiv['total_ws_vector']:.4f}Ws vs "
+            f"{equiv['total_ws_object']:.4f}Ws, "
+            f"max cell delta {equiv['max_rel_cell_delta']:.2e} rel, "
+            f"events_match={equiv['events_match']})")
     doc = cmp_.to_dict()
     doc["placement"] = {"always_on": sched_on.summary(),
                         "gate": sched_gate.summary(),
-                        "vector_equivalence": equiv}
+                        "vector_equivalence": verdicts[0],
+                        "engine_equivalence": verdicts}
     return cmp_, extra, doc
 
 
@@ -514,11 +701,13 @@ def run() -> list[str]:
     place_cmp, place_extra, place_doc = _placement_comparison()
     comparisons.append(place_cmp)
     scale_lines, scale_doc = _fleet_scale()
+    diurnal_lines, diurnal_doc = _fleet_diurnal_1m()
     LAST_REPORT.clear()
     LAST_REPORT.extend(c.to_dict() for c in comparisons[:-2])
     LAST_REPORT.append(fleet_doc)
     LAST_REPORT.append(place_doc)
     LAST_REPORT.append(scale_doc)
+    LAST_REPORT.append(diurnal_doc)
     for cmp_ in comparisons:
         lines.extend(render_comparison_csv(cmp_))
         lines.extend(render_comparison_text(cmp_))
@@ -528,6 +717,8 @@ def run() -> list[str]:
             lines.extend(place_extra)
         lines.append("")
     lines.extend(scale_lines)
+    lines.append("")
+    lines.extend(diurnal_lines)
     lines.append("")
     lines.append(f"# {len(comparisons)} Ws comparisons "
                  f"in {time.time()-t0:.1f}s")

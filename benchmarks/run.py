@@ -45,6 +45,12 @@ def main() -> None:
                          "output lines plus any structured numbers a suite "
                          "exposes via LAST_REPORT (bench_power's Ws "
                          "comparisons — the CI artifact)")
+    ap.add_argument("--profile", default=None, metavar="OUT",
+                    help="run each suite under cProfile and write the "
+                         "top functions by cumulative time here (text; "
+                         "the perf-triage artifact)")
+    ap.add_argument("--profile-top", type=int, default=40,
+                    help="how many rows --profile keeps per suite")
     args = ap.parse_args()
     names = (args.only.split(",") if args.only else list(SUITES))
 
@@ -53,13 +59,26 @@ def main() -> None:
     # top-level metrics block keyed by workload
     doc: dict = {"workload": ",".join(names), "metrics": {}, "suites": {}}
     failures = 0
+    profile_chunks: list[str] = []
     for name in names:
         mod = SUITES[name]
         print(f"\n# === {name} ({mod.__name__}) ===", flush=True)
         t0 = time.time()
         entry: dict = {}
         try:
-            lines = mod.run()
+            if args.profile:
+                import cProfile
+                import io
+                import pstats
+                prof = cProfile.Profile()
+                lines = prof.runcall(mod.run)
+                buf = io.StringIO()
+                (pstats.Stats(prof, stream=buf)
+                 .sort_stats("cumulative")
+                 .print_stats(args.profile_top))
+                profile_chunks.append(f"=== {name} ===\n{buf.getvalue()}")
+            else:
+                lines = mod.run()
             for line in lines:
                 print(line, flush=True)
             entry["lines"] = lines
@@ -82,6 +101,11 @@ def main() -> None:
         out.parent.mkdir(parents=True, exist_ok=True)
         out.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
         print(f"# json report -> {out}", flush=True)
+    if args.profile:
+        out = Path(args.profile)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text("\n".join(profile_chunks))
+        print(f"# profile -> {out}", flush=True)
     if failures:
         sys.exit(1)
 

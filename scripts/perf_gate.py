@@ -1,0 +1,87 @@
+"""Perf-regression gate — fresh fleet bench vs the committed baseline.
+
+    python scripts/perf_gate.py --report power-report.json \
+        [--baseline benchmarks/data/BENCH_fleet.json] \
+        [--warn-below 0.7] [--fail-below 0.4]
+
+Compares the fresh run's ``metrics.fleet_scale.arrivals_per_sec``
+(``benchmarks/run.py --json-out`` report, or a ``BENCH_fleet.json``-shaped
+doc — auto-detected) against the committed baseline at
+``benchmarks/data/BENCH_fleet.json``:
+
+  * ratio >= ``--warn-below`` (default 0.7)  -> OK, exit 0;
+  * ratio in [``--fail-below``, warn)        -> WARN, exit 0 (prints the
+    regression loudly so the CI log shows it);
+  * ratio <  ``--fail-below`` (default 0.4)  -> FAIL, exit 1.
+
+The ratio is only meaningful config-matched: when the fresh run's
+``nodes``/``arrivals`` differ from the baseline's (someone set
+``REPRO_BENCH_FLEET_NODES`` locally), the gate SKIPs with exit 0 —
+arrivals/sec is not comparable across fleet widths (routing is O(N)
+per arrival).  No deps beyond the stdlib — runs on the bare CI image.
+"""
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BASELINE = Path(__file__).resolve().parents[1] / "benchmarks" / "data" / \
+    "BENCH_fleet.json"
+
+
+def fleet_metrics(doc: dict) -> dict | None:
+    """Pull the fleet_scale metrics block out of either report shape."""
+    if doc.get("workload") == "fleet_scale":          # BENCH_fleet.json
+        return doc.get("metrics")
+    return (doc.get("metrics") or {}).get("fleet_scale")  # run.py report
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--report", required=True,
+                    help="fresh run: benchmarks/run.py --json-out report "
+                         "or a BENCH_fleet.json-shaped doc")
+    ap.add_argument("--baseline", default=str(BASELINE))
+    ap.add_argument("--warn-below", type=float, default=0.7)
+    ap.add_argument("--fail-below", type=float, default=0.4)
+    args = ap.parse_args()
+
+    try:
+        base = fleet_metrics(json.loads(Path(args.baseline).read_text()))
+    except (OSError, ValueError) as e:
+        print(f"perf-gate: SKIP — no readable baseline "
+              f"({args.baseline}: {e})")
+        return 0
+    fresh = fleet_metrics(json.loads(Path(args.report).read_text()))
+    if not base or not fresh:
+        print("perf-gate: SKIP — fleet_scale metrics missing from "
+              f"{'baseline' if not base else 'report'}")
+        return 0
+
+    for key in ("nodes", "arrivals"):
+        if base.get(key) != fresh.get(key):
+            print(f"perf-gate: SKIP — config mismatch on {key} "
+                  f"(baseline {base.get(key)}, fresh {fresh.get(key)}); "
+                  f"arrivals/sec is only comparable config-matched")
+            return 0
+
+    ratio = fresh["arrivals_per_sec"] / max(base["arrivals_per_sec"], 1e-9)
+    line = (f"fleet_scale arrivals/sec: fresh "
+            f"{fresh['arrivals_per_sec']:,.0f} vs baseline "
+            f"{base['arrivals_per_sec']:,.0f} -> {ratio:.2f}x "
+            f"({fresh.get('nodes')} nodes, {fresh.get('arrivals')} "
+            f"arrivals)")
+    if ratio < args.fail_below:
+        print(f"perf-gate: FAIL — {line} (< {args.fail_below:g}x)")
+        return 1
+    if ratio < args.warn_below:
+        print(f"perf-gate: WARN — {line} (< {args.warn_below:g}x; "
+              f"CI-runner jitter or a real regression — check the "
+              f"profile artifact)")
+        return 0
+    print(f"perf-gate: OK — {line}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,234 @@
+"""``repro.fleet.jax_backend`` — the jax array backend for the
+segment-batched fleet core (``repro.fleet.segment``).
+
+The segment engine splits its bookkeeping into two planes:
+
+  * the **control plane** (routing, admission, the planner, clocks,
+    decode meters, per-tenant spend) stays eager numpy — every branch
+    the reference engine takes reads these live, so deferring them
+    would change placement control flow;
+  * the **booking plane** (the dense decode/idle ledger cells, phase
+    rollups and per-node Ws) is a pure fold over per-step/per-stretch
+    records — no control flow ever reads it mid-run (admission reads
+    ``_tenant_ws``, which the fleet keeps eager).
+
+This module implements the booking plane as a jit-compiled
+``lax.scan`` over fixed-size record chunks.  Records are buffered
+dense (one ``[n]``/``[n, t]`` row set per live step or quiet stretch),
+padded with no-op zero records to the chunk size so one compilation
+serves the whole run, and folded into float64 carry tensors under
+``jax.experimental.enable_x64`` — scoped, never the global flag, so
+co-resident jax code keeps its default precision.  The carries are
+added into the fleet's numpy cell tensors at ``finalize``.
+
+Float contract: every scan operation is an elementwise add or
+max-compare mirroring the numpy accumulator, so the jax path lands
+within reduction-reorder distance (~1e-15 rel) of the stepped
+reference — far inside the 1e-6 equivalence budget — while integer
+counts and placement events stay exact.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+try:                                    # pragma: no cover - import gate
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+    HAVE_JAX = True
+except Exception:                       # pragma: no cover
+    jax = None
+    jnp = None
+    enable_x64 = None
+    HAVE_JAX = False
+
+#: records folded per compiled scan call (padded to this length)
+CHUNK = 64
+
+
+def _dec_scan(chunk: int):
+    """Build the decode-cell fold: carry += one chunk of dec records."""
+    def body(carry, rec):
+        cws, cs, cn, cpk, pws, ps, pn, ppk, nws = carry
+        tc, sc, cnk, w, dt, ws, pn_inc, wmax = rec
+        cws = cws + tc
+        cs = cs + sc
+        cn = cn + cnk
+        cpk = jnp.where(cnk > 0, jnp.maximum(cpk, w[:, None]), cpk)
+        pws = pws + jnp.sum(ws)
+        ps = ps + jnp.sum(dt)
+        pn = pn + pn_inc
+        ppk = jnp.where(wmax > ppk, wmax, ppk)
+        nws = nws + ws
+        return (cws, cs, cn, cpk, pws, ps, pn, ppk, nws), None
+
+    def run(carry, recs):
+        return jax.lax.scan(body, carry, recs)[0]
+
+    return jax.jit(run)
+
+
+def _idle_scan(chunk: int):
+    """Build the idle-cell fold (infra tenant only): carry += chunk."""
+    def body(carry, rec):
+        cws, cs, cn, cpk, pws, ps, pn, ppk, nws = carry
+        w, dt, ws, cnk, pn_inc, wmax = rec
+        cws = cws + ws
+        cs = cs + dt
+        cn = cn + cnk
+        # the stepped reference books idle peaks with np.maximum
+        # (NaN-propagating), masked here to the nodes actually idling
+        cpk = jnp.where(cnk > 0, jnp.maximum(cpk, w), cpk)
+        pws = pws + jnp.sum(ws)
+        ps = ps + jnp.sum(dt)
+        pn = pn + pn_inc
+        ppk = jnp.where(wmax > ppk, wmax, ppk)
+        nws = nws + ws
+        return (cws, cs, cn, cpk, pws, ps, pn, ppk, nws), None
+
+    def run(carry, recs):
+        return jax.lax.scan(body, carry, recs)[0]
+
+    return jax.jit(run)
+
+
+class JaxAccumulator:
+    """Deferred booking plane: buffer dense records, fold in chunks.
+
+    The fleet calls ``book_dec``/``book_idle`` with the *already
+    computed* batched arrays (indices, per-tenant cell adds, watt
+    points); this class only defers the fold.  ``finalize`` drains the
+    buffers and adds the carries into the fleet's numpy tensors.
+    """
+
+    def __init__(self, fleet):
+        if not HAVE_JAX:
+            raise RuntimeError(
+                "backend='jax' needs jax installed — it is optional; "
+                "use backend='numpy' (engine vector-seg) instead")
+        self.f = fleet
+        n = fleet.n
+        t = len(fleet.tenant_names)
+        self.n, self.t = n, t
+        self._dec_recs: list = []
+        self._idle_recs: list = []
+        with enable_x64():
+            z_nt = jnp.zeros((n, t), jnp.float64)
+            z_nti = jnp.zeros((n, t), jnp.int64)
+            z_n = jnp.zeros(n, jnp.float64)
+            z_ni = jnp.zeros(n, jnp.int64)
+            z = jnp.float64(0.0)
+            zi = jnp.int64(0)
+            self._dec_carry = (z_nt, z_nt, z_nti, z_nt, z, z, zi, z, z_n)
+            self._idle_carry = (z_n, z_n, z_ni, z_n, z, z, zi, z, z_n)
+        self._dec_fold = _dec_scan(CHUNK)
+        self._idle_fold = _idle_scan(CHUNK)
+
+    # -- record builders ----------------------------------------------
+
+    def book_dec(self, bi, cnt, tcell, scell, w, dt, ws, k, wmax):
+        n, t = self.n, self.t
+        tc = np.zeros((n, t))
+        sc = np.zeros((n, t))
+        cnk = np.zeros((n, t), np.int64)
+        dw = np.zeros(n)
+        ddt = np.zeros(n)
+        dws = np.zeros(n)
+        tc[bi] = tcell
+        sc[bi] = scell
+        cnk[bi] = cnt * k
+        dw[bi] = w
+        ddt[bi] = dt
+        dws[bi] = ws
+        self._dec_recs.append(
+            (tc, sc, cnk, dw, ddt, dws, np.int64(bi.size * k),
+             np.float64(wmax)))
+        if len(self._dec_recs) >= CHUNK:
+            self._flush_dec()
+
+    def book_idle(self, ii, w, dt, ws, k, wmax):
+        n = self.n
+        iw = np.zeros(n)
+        idt = np.zeros(n)
+        iws = np.zeros(n)
+        cnk = np.zeros(n, np.int64)
+        iw[ii] = w
+        idt[ii] = dt
+        iws[ii] = ws
+        cnk[ii] = k
+        self._idle_recs.append(
+            (iw, idt, iws, cnk, np.int64(ii.size * k), np.float64(wmax)))
+        if len(self._idle_recs) >= CHUNK:
+            self._flush_idle()
+
+    # -- folds --------------------------------------------------------
+
+    @staticmethod
+    def _pad_stack(recs, chunk):
+        """Stack record tuples into chunk-length arrays, zero-padding
+        the tail (wmax pads to -inf so padded records update nothing)."""
+        pad = chunk - len(recs)
+        cols = list(zip(*recs))
+        out = []
+        for ci, col in enumerate(cols):
+            a = np.stack(col)
+            if pad:
+                shape = (pad,) + a.shape[1:]
+                if ci == len(cols) - 1:         # wmax column
+                    fill = np.full(shape, -np.inf)
+                else:
+                    fill = np.zeros(shape, a.dtype)
+                a = np.concatenate([a, fill])
+            out.append(a)
+        return tuple(out)
+
+    def _flush_dec(self):
+        if not self._dec_recs:
+            return
+        recs = self._pad_stack(self._dec_recs, CHUNK)
+        self._dec_recs = []
+        with enable_x64():
+            jrecs = tuple(jnp.asarray(a) for a in recs)
+            self._dec_carry = self._dec_fold(self._dec_carry, jrecs)
+
+    def _flush_idle(self):
+        if not self._idle_recs:
+            return
+        recs = self._pad_stack(self._idle_recs, CHUNK)
+        self._idle_recs = []
+        with enable_x64():
+            jrecs = tuple(jnp.asarray(a) for a in recs)
+            self._idle_carry = self._idle_fold(self._idle_carry, jrecs)
+
+    def finalize(self):
+        """Drain buffers and add the deferred deltas into the fleet's
+        numpy account (phase indices match ``vector.PHASES``)."""
+        self._flush_dec()
+        self._flush_idle()
+        f = self.f
+        from repro.fleet.vector import _DEC, _IDLE
+        cws, cs, cn, cpk, pws, ps, pn, ppk, nws = \
+            [np.asarray(x) for x in self._dec_carry]
+        f._cell_ws[:, :, _DEC] += cws
+        f._cell_s[:, :, _DEC] += cs
+        f._cell_n[:, :, _DEC] += cn
+        f._cell_peak[:, :, _DEC] = np.maximum(f._cell_peak[:, :, _DEC], cpk)
+        f._phase_ws[_DEC] += pws
+        f._phase_s[_DEC] += ps
+        f._phase_n[_DEC] += pn
+        if ppk > f._phase_peak[_DEC]:
+            f._phase_peak[_DEC] = ppk
+        f._node_ws += nws
+        iws_c, is_c, in_c, ipk, pws, ps, pn, ppk, nws = \
+            [np.asarray(x) for x in self._idle_carry]
+        f._cell_ws[:, f._infra, _IDLE] += iws_c
+        f._cell_s[:, f._infra, _IDLE] += is_c
+        f._cell_n[:, f._infra, _IDLE] += in_c
+        f._cell_peak[:, f._infra, _IDLE] = np.maximum(
+            f._cell_peak[:, f._infra, _IDLE], ipk)
+        f._phase_ws[_IDLE] += pws
+        f._phase_s[_IDLE] += ps
+        f._phase_n[_IDLE] += pn
+        if ppk > f._phase_peak[_IDLE]:
+            f._phase_peak[_IDLE] = ppk
+        f._node_ws += nws

@@ -29,6 +29,8 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass, field
 
+import numpy as np
+
 #: floors that keep every estimate finite whatever the inputs
 _MIN_GAP = 1e-6
 _MIN_SERVICE = 1e-6
@@ -94,12 +96,19 @@ class ArrivalForecaster:
         """P(wait) for M/M/c at ``offered`` erlangs (< servers).
 
         Computed with the iterative term ratio (term_k = a^k/k!) so no
-        intermediate overflows even for large server counts."""
-        term = 1.0                      # a^0/0!
-        partial = 1.0                   # sum_{k<1}
-        for k in range(1, servers):
-            term *= offered / k
-            partial += term
+        intermediate overflows even for large server counts.  The ratio
+        chain is a cumprod and the partial sum a cumsum seeded with the
+        k=0 term — both sequential reductions, so each float lands on
+        the exact bit pattern the scalar loop produced."""
+        if servers > 1:
+            terms = np.cumprod(offered / np.arange(1, servers,
+                                                   dtype=np.float64))
+            partial = float(np.cumsum(
+                np.concatenate(([1.0], terms)))[-1])
+            term = float(terms[-1])
+        else:
+            term = 1.0                  # a^0/0!
+            partial = 1.0               # sum_{k<1}
         term *= offered / servers       # a^c/c!
         rho = offered / servers
         last = term / max(1.0 - rho, _MIN_GAP)
@@ -137,6 +146,50 @@ class ArrivalForecaster:
         if not math.isfinite(lq):
             return horizon / service_time
         return max(lq, 0.0)
+
+    def expected_queue_depth_many(self, servers, service_time: float,
+                                  now: float | None = None,
+                                  horizon: float = 64.0):
+        """``expected_queue_depth`` for a whole array of server counts
+        in one sweep — bit-identical per element to the scalar call.
+
+        All candidate counts share one term chain: the scalar
+        Erlang-C's sequential ``term *= offered/k`` multiplies are the
+        prefixes of a single cumprod, and its ``partial += term`` adds
+        the prefixes of a single cumsum, so evaluating every candidate
+        costs one O(max servers) pass instead of O(sum of servers).
+        The planner's ranked k-search gathers from this sweep."""
+        servers = np.maximum(np.asarray(servers, np.int64), 1)
+        if servers.size == 0:
+            return np.zeros(0)
+        service_time = max(float(service_time), _MIN_SERVICE)
+        horizon = max(float(horizon), 0.0)
+        lam = self.rate(now)
+        mu = 1.0 / service_time
+        offered = lam / mu
+        c_max = int(servers.max())
+        terms = (np.cumprod(offered / np.arange(1, c_max,
+                                                dtype=np.float64))
+                 if c_max > 1 else np.zeros(0))
+        partial_all = np.cumsum(np.concatenate(([1.0], terms)))
+        partial = partial_all[servers - 1]
+        term = (np.where(servers > 1, terms[np.maximum(servers - 2, 0)],
+                         1.0)
+                if terms.size else np.ones(servers.shape))
+        term = term * (offered / servers)
+        rho = offered / servers
+        last = term / np.maximum(1.0 - rho, _MIN_GAP)
+        denom = partial + last
+        p_wait = np.where((denom <= 0.0) | ~np.isfinite(denom), 1.0,
+                          np.minimum(np.maximum(
+                              last / np.where(denom != 0.0, denom, 1.0),
+                              0.0), 1.0))
+        lq = p_wait * rho / np.maximum(1.0 - rho, _MIN_GAP)
+        lq = np.where(np.isfinite(lq), np.maximum(lq, 0.0),
+                      horizon / service_time)
+        h = max(horizon, 1.0)
+        sat = lam * h + np.maximum((lam - servers * mu) * h, 0.0)
+        return np.where(rho >= 1.0, sat, lq)
 
     def utilization(self, servers: int, service_time: float,
                     now: float | None = None) -> float:

@@ -108,21 +108,36 @@ class VectorArrivals:
     ``tenant_idx`` indexes ``tenant_names``; ``prompt_len`` /
     ``tokens_done`` / ``max_new`` are what the loop models need of a
     ``Request`` (token *values* never matter to the energy account).
+
+    The stream must arrive due-sorted and non-negative — the dispatch
+    cursor is O(1) *because* it never looks back, so an unsorted script
+    would silently mis-dispatch every arrival already behind the
+    cursor.  Sort scripts with ``normalize_arrivals`` (what
+    ``from_requests`` does) rather than relying on construction.
     """
 
     def __init__(self, due, tenant_idx, prompt_len, max_new,
                  tenant_names, rid=None, tokens_done=None):
-        due = np.asarray(due, np.float64)
-        order = np.argsort(due, kind="stable")
-        self.due = due[order]
-        self.tenant_idx = np.asarray(tenant_idx, np.int64)[order]
-        self.prompt_len = np.asarray(prompt_len, np.int64)[order]
-        self.max_new = np.asarray(max_new, np.int64)[order]
-        n = len(self.due)
+        self.due = due = np.asarray(due, np.float64)
+        if due.size:
+            if not np.all(due[:-1] <= due[1:]):
+                bad = int(np.argmin(due[:-1] <= due[1:]))
+                raise ValueError(
+                    "arrival due steps must be non-decreasing (the "
+                    "dispatch cursor never looks back) — "
+                    f"due[{bad}]={due[bad]:g} > due[{bad + 1}]="
+                    f"{due[bad + 1]:g}; sort the script first")
+            if due[0] < 0:
+                raise ValueError("arrival due steps must be >= 0, got "
+                                 f"due[0]={due[0]:g}")
+        self.tenant_idx = np.asarray(tenant_idx, np.int64)
+        self.prompt_len = np.asarray(prompt_len, np.int64)
+        self.max_new = np.asarray(max_new, np.int64)
+        n = len(due)
         self.rid = (np.arange(n, dtype=np.int64) if rid is None
-                    else np.asarray(rid, np.int64)[order])
+                    else np.asarray(rid, np.int64))
         self.tokens_done = (np.zeros(n, np.int64) if tokens_done is None
-                            else np.asarray(tokens_done, np.int64)[order])
+                            else np.asarray(tokens_done, np.int64))
         self.tenant_names = list(tenant_names)
 
     def __len__(self) -> int:
@@ -136,21 +151,29 @@ class VectorArrivals:
         pairs — normalized/sorted identically, so both cores see one
         stream."""
         pairs = normalize_arrivals(arrivals, arrival_every)
+        n = len(pairs)
+        due = np.empty(n, np.float64)
+        tidx = np.empty(n, np.int64)
+        plen = np.empty(n, np.int64)
+        max_new = np.empty(n, np.int64)
+        rid = np.empty(n, np.int64)
+        tokens_done = np.empty(n, np.int64)
         names: list = []
         index: dict = {}
-        tidx = []
-        for _, req in pairs:
-            if req.tenant not in index:
-                index[req.tenant] = len(names)
+        for k, (d, req) in enumerate(pairs):
+            t = index.get(req.tenant)
+            if t is None:
+                t = index[req.tenant] = len(names)
                 names.append(req.tenant)
-            tidx.append(index[req.tenant])
-        return cls(due=[d for d, _ in pairs],
-                   tenant_idx=tidx,
-                   prompt_len=[len(r.prompt) for _, r in pairs],
-                   max_new=[r.max_new for _, r in pairs],
-                   tenant_names=names,
-                   rid=[r.rid for _, r in pairs],
-                   tokens_done=[len(r.out) for _, r in pairs])
+            due[k] = d
+            tidx[k] = t
+            plen[k] = len(req.prompt)
+            max_new[k] = req.max_new
+            rid[k] = req.rid
+            tokens_done[k] = len(req.out)
+        return cls(due=due, tenant_idx=tidx, prompt_len=plen,
+                   max_new=max_new, tenant_names=names, rid=rid,
+                   tokens_done=tokens_done)
 
     @classmethod
     def synth(cls, n: int, tenants=4, mean_gap_steps: float = 1.0,
@@ -165,6 +188,53 @@ class VectorArrivals:
                  if isinstance(tenants, int) else list(tenants))
         gaps = rng.exponential(mean_gap_steps, size=n)
         due = np.floor(np.cumsum(gaps)).astype(np.int64)
+        return cls(due=due,
+                   tenant_idx=rng.integers(0, len(names), size=n),
+                   prompt_len=rng.integers(prompt_len[0], prompt_len[1],
+                                           size=n),
+                   max_new=np.full(n, max_new, np.int64),
+                   tenant_names=names)
+
+    #: relative per-hour arrival weights of the default synthetic day —
+    #: a deep night trough, a morning ramp into the first peak, an
+    #: evening second peak (the classic two-hump diurnal curve)
+    DIURNAL_PROFILE = (2, 1, 1, 1, 1, 2, 5, 12, 20, 26, 28, 26,
+                       22, 20, 18, 20, 24, 30, 32, 28, 18, 10, 6, 3)
+
+    @classmethod
+    def diurnal(cls, n: int, tenants=4, hours: int = 24,
+                steps_per_hour: int = 2000, profile=None,
+                prompt_len=(4, 12), max_new: int = 8,
+                seed: int = 0) -> "VectorArrivals":
+        """A reproducible diurnal stream: ``n`` arrivals split across
+        ``hours`` virtual hours of ``steps_per_hour`` fleet steps each,
+        hour weights following ``profile`` (relative rates; default the
+        two-peak ``DIURNAL_PROFILE``), uniform within each hour — the
+        ``fleet_diurnal_1m`` bench workload.  The per-hour counts are
+        deterministic (largest-remainder split), so the trace shape is
+        stable across seeds."""
+        rng = np.random.default_rng(seed)
+        names = ([f"tenant{i}" for i in range(tenants)]
+                 if isinstance(tenants, int) else list(tenants))
+        w = np.asarray(profile if profile is not None
+                       else cls.DIURNAL_PROFILE, np.float64)
+        if len(w) != hours or np.any(w < 0) or w.sum() <= 0:
+            raise ValueError(f"profile needs {hours} non-negative hour "
+                             "weights with a positive sum")
+        exact = w * (n / w.sum())
+        counts = np.floor(exact).astype(np.int64)
+        rem = n - int(counts.sum())
+        if rem > 0:
+            counts[np.argsort(-(exact - counts), kind="stable")[:rem]] += 1
+        dues = []
+        for h in range(hours):
+            c = int(counts[h])
+            if c == 0:
+                continue
+            lo, hi = h * steps_per_hour, (h + 1) * steps_per_hour
+            dues.append(np.sort(rng.uniform(lo, hi, size=c)))
+        due = np.floor(np.concatenate(dues)) if dues \
+            else np.empty(0, np.float64)
         return cls(due=due,
                    tenant_idx=rng.integers(0, len(names), size=n),
                    prompt_len=rng.integers(prompt_len[0], prompt_len[1],
@@ -292,6 +362,7 @@ class VectorFleet:
         self._w_idle = np.asarray(self._watts(slice(None), 0.0))
         self._w_pre = np.asarray(self._watts(slice(None),
                                              1.0 / self._slots))
+        self._refresh_watt_tables()
         self._marg = None
 
         # -- power machines -------------------------------------------
@@ -354,6 +425,24 @@ class VectorFleet:
                         self._decode_s / np.maximum(self._decode_n, 1),
                         self._nominal)
 
+    def _refresh_watt_tables(self) -> None:
+        """Hoist the routing-invariant envelope terms: a node's watt
+        point depends only on its occupancy bucket ``m = min(next,
+        slots)``, so ``_occ_w[i, m]`` precomputes ``_watts(i, m/slots)``
+        for every bucket.  The table is static today (envelope and
+        source draws never move under the vector core); any future
+        placement-driven change to the watt model must re-call this."""
+        s_max = int(self._slots.max()) if self.n else 0
+        cols = [np.asarray(self._watts(
+                    slice(None),
+                    np.minimum(m, self._slots) / np.maximum(self._slots, 1)))
+                for m in range(s_max + 1)]
+        self._occ_w = np.stack(cols, axis=1)      # [n, s_max + 1]
+        # python-float mirrors for the scalar hot path (_marginal_one):
+        # one list index beats a numpy scalar chain by ~20x
+        self._occ_w_py = self._occ_w.tolist()
+        self._nominal_py = self._nominal.tolist()
+
     # ------------------------------------------------------------------
     # ledger cells
     # ------------------------------------------------------------------
@@ -400,12 +489,14 @@ class VectorFleet:
 
     def _marginal(self):
         """``Node.marginal_ws_per_token`` over all nodes, with the
-        non-finite clamp the reference router applies."""
+        non-finite clamp the reference router applies.  The watt point
+        is a precomputed occupancy-bucket lookup (``_occ_w``) — the
+        envelope expression never re-evaluates inside routing."""
         n_next = self._occupied + self._queued + 1
-        util = np.minimum(n_next, self._slots) / np.maximum(self._slots, 1)
+        m_occ = np.minimum(n_next, self._slots)
         dt = self._recent_dt()
-        w = self._watts(slice(None), util)
-        share = w * dt / np.maximum(np.minimum(n_next, self._slots), 1)
+        w = self._occ_w[np.arange(self.n), m_occ]
+        share = w * dt / np.maximum(m_occ, 1)
         overload = np.maximum(n_next - self._slots, 0)
         marg = share * (1.0 + overload / np.maximum(self._slots, 1))
         return np.where(np.isfinite(marg), marg, np.inf)
@@ -417,13 +508,13 @@ class VectorFleet:
         qd = int(self._queued[i])
         slots = int(self._slots[i])
         n_next = occ + qd + 1
-        util = min(n_next, slots) / max(slots, 1)
+        m_occ = min(n_next, slots)
         dn = int(self._decode_n[i])
         ds = float(self._decode_s[i])
         dt = ds / max(dn, 1) if (dn > 0 and ds > 0) \
-            else float(self._nominal[i])
-        w = float(self._watts(i, util))
-        share = w * dt / max(min(n_next, slots), 1)
+            else self._nominal_py[i]
+        w = self._occ_w_py[i][m_occ]
+        share = w * dt / max(m_occ, 1)
         m = share * (1.0 + max(n_next - slots, 0) / max(slots, 1))
         return m if math.isfinite(m) else float("inf")
 
@@ -925,11 +1016,9 @@ class VectorFleet:
         return bool(np.any((self._occupied > 0)
                            | ((self._queued > 0) & ~self._loop_parked)))
 
-    def run(self, arrivals, max_steps: int = 10_000,
-            arrival_every: int = 1) -> list:
-        """Serve one arrival stream to completion; returns the finished
-        request ids sorted by rid.  Single-shot: the dense cell tensor
-        is an append-only account of exactly one run."""
+    def _begin_run(self, arrivals, arrival_every: int = 1) -> int:
+        """Shared run prologue: single-shot guard, request-array setup.
+        Returns the request count."""
         if self._ran:
             raise RuntimeError("VectorFleet.run is single-shot — build a "
                                "fresh fleet per run")
@@ -956,6 +1045,14 @@ class VectorFleet:
         self.r_fill_cum = np.zeros(n_req)
         self.r_finish_key = np.zeros(n_req, np.int64)
         self._finished_idx: list = []
+        return n_req
+
+    def run(self, arrivals, max_steps: int = 10_000,
+            arrival_every: int = 1) -> list:
+        """Serve one arrival stream to completion; returns the finished
+        request ids sorted by rid.  Single-shot: the dense cell tensor
+        is an append-only account of exactly one run."""
+        n_req = self._begin_run(arrivals, arrival_every)
         due = self.r_due
         idx = 0
         for _ in range(max_steps):

@@ -42,7 +42,7 @@ from repro.configs import get_config
 from repro.core.adapt import ReconfigPolicy, Reconfigurator
 from repro.core.ga import GAConfig
 from repro.fleet import (AdmissionController, FleetPolicy, FleetPowerPlanner,
-                         FleetScheduler, Node, PowerPlanPolicy,
+                         FleetScheduler, Node, PowerPlanPolicy, SegmentFleet,
                          VectorArrivals, VectorFleet, VectorNodeSpec)
 from repro.models.model import Model
 from repro.serve.engine import Request
@@ -143,12 +143,18 @@ def run_vector(args) -> None:
     if args.placement:
         plan = PowerPlanPolicy(mode=args.placement,
                                slo_queue_depth=args.slo_queue_depth)
-    vec = VectorFleet(specs,
-                      policy=FleetPolicy(flush_every=args.flush_every,
-                                         checkpoint_every=args.checkpoint_every,
-                                         router=args.router,
-                                         migrate_on_drift=False),
-                      plan=plan, admission=admission, loop_model="serve")
+    policy = FleetPolicy(flush_every=args.flush_every,
+                         checkpoint_every=args.checkpoint_every,
+                         router=args.router,
+                         migrate_on_drift=False)
+    if args.engine == "vector":
+        vec = VectorFleet(specs, policy=policy, plan=plan,
+                          admission=admission, loop_model="serve")
+    else:
+        backend = "jax" if args.engine == "vector-jax" else "numpy"
+        vec = SegmentFleet(specs, policy=policy, plan=plan,
+                           admission=admission, loop_model="serve",
+                           backend=backend)
     t0 = time.time()
     finished = vec.run(arrivals)
     wall = time.time() - t0
@@ -167,7 +173,7 @@ def run_vector(args) -> None:
               f"{r['decode_ws']:.3f}Ws decode")
     print(f"\nserved {len(finished)} requests, {n_tok} tokens in "
           f"{wall:.2f}s simulated on {vec.n} nodes ({vec.steps} fleet "
-          f"steps, router={args.router}, engine=vector)")
+          f"steps, router={args.router}, engine={args.engine})")
     for line in render_rollups(vec.ledger, label="fleet[vector]"):
         print(line)
     summary = vec.summary()
@@ -224,11 +230,15 @@ def main() -> None:
     ap.add_argument("--fleet", type=int, default=1,
                     help="number of serving nodes under the scheduler")
     ap.add_argument("--engine", default="object",
-                    choices=("object", "vector"),
+                    choices=("object", "vector", "vector-seg", "vector-jax"),
                     help="fleet core: the object-level reference "
-                         "(ServeLoop per node, real jax decode) or the "
-                         "vectorized repro.fleet.vector core (numpy node "
-                         "arrays, joule-equivalent by contract, no model)")
+                         "(ServeLoop per node, real jax decode), the "
+                         "stepped repro.fleet.vector core (numpy node "
+                         "arrays, joule-equivalent by contract, no model), "
+                         "the event-horizon segment engine (vector-seg: "
+                         "quiet stretches advance in one batched update), "
+                         "or the segment engine with the jax lax.scan "
+                         "booking backend (vector-jax)")
     ap.add_argument("--tick", type=float, default=0.004,
                     help="vector engine: virtual TickClock seconds per "
                          "decode/prefill/idle window")
@@ -291,7 +301,7 @@ def main() -> None:
                          "text exposition here")
     args = ap.parse_args()
 
-    if args.engine == "vector":
+    if args.engine != "object":
         for flag, name in ((args.govern, "--govern"),
                            (args.trace_out, "--trace-out"),
                            (args.verify_rung, "--verify-rung")):
@@ -299,9 +309,15 @@ def main() -> None:
                 ap.error(f"{name} is object-engine only (per-node "
                          f"governors and power traces need the object "
                          f"loops) — drop it or use --engine object")
+    if args.engine == "vector-jax":
+        from repro.fleet.jax_backend import HAVE_JAX
+        if not HAVE_JAX:
+            ap.error("--engine vector-jax needs jax installed — use "
+                     "--engine vector-seg (same segment core, numpy "
+                     "booking) instead")
     if args.trace_spans or args.metrics_out:
         obs.enable()
-    if args.engine == "vector":
+    if args.engine != "object":
         run_vector(args)
         return
 

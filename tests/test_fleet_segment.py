@@ -1,0 +1,204 @@
+"""The segment-batched fleet engine vs the stepped vector reference.
+
+The contract (docs/fleet_scale.md): ``SegmentFleet`` advances the fleet
+in event-horizon segments — between interesting steps the whole quiet
+stretch collapses into one batched array update — but the joule account
+must not move.  On one arrival script the segment engine (numpy booking,
+and the jax ``lax.scan`` backend when jax is importable) reproduces the
+stepped ``VectorFleet``'s ledger cell for cell, the placement-event
+sequence exactly, and the finished-request set exactly.  Plus the
+satellites this PR rode in on: ``VectorArrivals`` construction
+validation, the deterministic ``diurnal`` stream, the planner's
+one-sweep M/M/c k-search, and the ``--engine vector-seg``/``vector-jax``
+CLI surface.
+"""
+import numpy as np
+import pytest
+
+from repro.core.power import R740_ARRIA10
+from repro.fleet import (AdmissionController, ArrivalForecaster,
+                         FleetPolicy, PowerPlanPolicy, PowerStatePolicy,
+                         SegmentFleet, VectorArrivals, VectorFleet,
+                         VectorNodeSpec)
+from repro.fleet.jax_backend import HAVE_JAX
+from repro.serve.engine import Request
+from repro.telemetry import WsBudget, node_envelope
+
+TICK = 0.004
+
+BACKENDS = ["numpy"] + (["jax"] if HAVE_JAX else [])
+
+
+def _req(rid, max_new=6, tenant="default", plen=5):
+    return Request(rid=rid, prompt=np.full(plen, 2, np.int32),
+                   max_new=max_new, tenant=tenant)
+
+
+def _script():
+    """Two bursts around a long trough, then a dense re-admission burst:
+    long quiet stretches (segments span many steps), gates during the
+    trough, boot + canary wakes inside the second burst — every segment
+    boundary kind exercised."""
+    dues = (list(range(1, 7)) + list(range(120, 138, 3))
+            + [200 + k // 3 for k in range(18)])
+    return [(due, _req(rid, max_new=3 + rid % 4, tenant=f"team{rid % 2}"))
+            for rid, due in enumerate(dues)]
+
+
+def _make(cls, n_nodes=3, slots=2, loop_model="serve", planned=True,
+          admitted=True, **kw):
+    policy = FleetPolicy(flush_every=4, checkpoint_every=8,
+                         router="energy", migrate_on_drift=False)
+    ppol = PowerPlanPolicy(
+        mode="gate", slo_queue_depth=4.0, plan_every=4, min_active=1,
+        min_active_steps=20, horizon_steps=32.0,
+        states=PowerStatePolicy(gate_watts=3.0, boot_energy_ws=2.0,
+                                warmup_steps=4, cooldown_steps=8)) \
+        if planned else None
+    env = node_envelope(R740_ARRIA10)
+    specs = [VectorNodeSpec(f"n{i}", env, slots=slots, step_s=TICK)
+             for i in range(n_nodes)]
+    adm = AdmissionController(
+        {"team0": WsBudget(budget_ws=12.0, window_steps=0)}) \
+        if admitted else None
+    return cls(specs, policy=policy, plan=ppol, admission=adm,
+               loop_model=loop_model, **kw)
+
+
+def _assert_twin(ref, seg, fin_ref, fin_seg, rtol=1e-9):
+    assert fin_seg == fin_ref
+    assert seg.steps == ref.steps
+    assert [(e.step, e.node, e.action, tuple(e.moved_rids))
+            for e in seg.events] == \
+        [(e.step, e.node, e.action, tuple(e.moved_rids))
+         for e in ref.events]
+    a, b = ref.ledger, seg.ledger
+    assert abs(a.total_ws - b.total_ws) <= rtol * max(abs(a.total_ws), 1e-9)
+    assert set(a.cells) == set(b.cells)
+    for key, ca in a.cells.items():
+        cb = b.cells[key]
+        assert ca.count == cb.count, (key, ca.count, cb.count)
+        assert abs(ca.ws - cb.ws) <= rtol * max(abs(ca.ws), 1e-9), key
+        assert abs(ca.seconds - cb.seconds) <= \
+            rtol * max(abs(ca.seconds), 1e-9), key
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_serve_equivalence_gates_wakes_admission(backend):
+    """The full control surface in one run: energy routing, admission
+    throttling, trough gating, burst wakes through boot + canary."""
+    ref = _make(VectorFleet)
+    fin_ref = ref.run(_script(), max_steps=400)
+    seg = _make(SegmentFleet, backend=backend)
+    fin_seg = seg.run(_script(), max_steps=400)
+    assert any(e.action == "gate" for e in ref.events)
+    assert any(e.action == "wake" for e in ref.events)
+    assert ref.admission.rejections   # the budget actually throttled
+    _assert_twin(ref, seg, fin_ref, fin_seg)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sim_equivalence_with_planner(backend):
+    ref = _make(VectorFleet, loop_model="sim", admitted=False)
+    fin_ref = ref.run(_script(), max_steps=400)
+    seg = _make(SegmentFleet, loop_model="sim", admitted=False,
+                backend=backend)
+    fin_seg = seg.run(_script(), max_steps=400)
+    _assert_twin(ref, seg, fin_ref, fin_seg)
+
+
+def test_max_steps_caps_mid_stretch():
+    """A cap landing inside a long quiet stretch must stop the segment
+    engine at exactly the capped step — not at the stretch's end."""
+    script = [(0, _req(0, max_new=2)), (1000, _req(1, max_new=2))]
+    ref = _make(VectorFleet, planned=False, admitted=False)
+    fin_ref = ref.run(script, max_steps=100)
+    seg = _make(SegmentFleet, planned=False, admitted=False)
+    fin_seg = seg.run(script, max_steps=100)
+    assert seg.steps == ref.steps == 100
+    _assert_twin(ref, seg, fin_ref, fin_seg)
+
+
+def test_queue_ring_grows_past_initial_capacity():
+    """20 same-step arrivals on a 1-slot node overflow the initial
+    8-deep ring buffer — growth must keep FIFO order (the stepped
+    reference uses an unbounded deque)."""
+    script = [(0, _req(rid, max_new=2)) for rid in range(20)]
+    ref = _make(VectorFleet, n_nodes=1, slots=1, planned=False,
+                admitted=False)
+    fin_ref = ref.run(script, max_steps=300)
+    seg = _make(SegmentFleet, n_nodes=1, slots=1, planned=False,
+                admitted=False)
+    fin_seg = seg.run(script, max_steps=300)
+    assert len(fin_seg) == 20
+    _assert_twin(ref, seg, fin_ref, fin_seg)
+
+
+def test_arrivals_must_be_sorted_and_non_negative():
+    kw = dict(tenant_idx=[0, 0], prompt_len=[3, 3], max_new=[2, 2],
+              tenant_names=["t"])
+    with pytest.raises(ValueError, match="non-decreasing"):
+        VectorArrivals(due=[5, 1], **kw)
+    with pytest.raises(ValueError, match=">= 0"):
+        VectorArrivals(due=[-1, 1], **kw)
+
+
+def test_diurnal_stream_is_deterministic_and_shaped():
+    a = VectorArrivals.diurnal(5000, tenants=3, seed=3)
+    b = VectorArrivals.diurnal(5000, tenants=3, seed=3)
+    assert len(a) == 5000
+    np.testing.assert_array_equal(a.due, b.due)
+    np.testing.assert_array_equal(a.tenant_idx, b.tenant_idx)
+    np.testing.assert_array_equal(a.prompt_len, b.prompt_len)
+    assert np.all(a.due[:-1] <= a.due[1:])
+    # the two-hump day: the night trough is far quieter than the peaks
+    hour = (a.due // 2000).astype(np.int64)
+    counts = np.bincount(hour, minlength=24)
+    assert counts[2] < counts[10] and counts[2] < counts[18]
+    with pytest.raises(ValueError, match="hour weights"):
+        VectorArrivals.diurnal(100, profile=(1, 2, 3))
+
+
+def test_expected_queue_depth_many_bit_matches_scalar():
+    """The planner's one-sweep k-search gathers from the vectorized
+    M/M/c closure — it must return the scalar call's exact bits for
+    every server count, through under-load, near-saturation, and the
+    overloaded saturation-price branch."""
+    fc = ArrivalForecaster()
+    for t in np.linspace(0.0, 3.0, 40):     # a brisk observed stream
+        fc.observe(float(t))
+    servers = np.arange(1, 65, dtype=np.int64)
+    for service_time in (0.01, 0.2, 2.0, 50.0):
+        many = fc.expected_queue_depth_many(servers, service_time,
+                                            now=3.0, horizon=64.0)
+        for i, c in enumerate(servers):
+            one = fc.expected_queue_depth(int(c), service_time,
+                                          now=3.0, horizon=64.0)
+            assert many[i] == one, (c, service_time, many[i], one)
+
+
+def test_segment_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="backend"):
+        _make(SegmentFleet, backend="cuda")
+
+
+def test_cli_selects_segment_engine(monkeypatch, capsys):
+    from repro.launch import serve
+    monkeypatch.setattr("sys.argv", [
+        "serve", "--engine", "vector-seg", "--fleet", "2", "--slots", "2",
+        "--requests", "4", "--max-new", "4", "--placement", "gate"])
+    serve.main()
+    out = capsys.readouterr().out
+    assert "engine=vector-seg" in out
+    assert "served 4 requests" in out
+
+
+@pytest.mark.skipif(not HAVE_JAX, reason="jax backend needs jax")
+def test_cli_selects_jax_engine(monkeypatch, capsys):
+    from repro.launch import serve
+    monkeypatch.setattr("sys.argv", [
+        "serve", "--engine", "vector-jax", "--fleet", "2", "--slots", "2",
+        "--requests", "4", "--max-new", "4"])
+    serve.main()
+    out = capsys.readouterr().out
+    assert "engine=vector-jax" in out

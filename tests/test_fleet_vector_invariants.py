@@ -17,8 +17,9 @@ from hypothesis import given, settings, strategies as st
 
 from fleet_sim import sim_envelope_node
 from repro.fleet import (FleetPolicy, FleetPowerPlanner, FleetScheduler,
-                         PowerPlanPolicy, PowerStatePolicy, VectorFleet,
-                         VectorNodeSpec)
+                         PowerPlanPolicy, PowerStatePolicy, SegmentFleet,
+                         VectorFleet, VectorNodeSpec)
+from repro.fleet.jax_backend import HAVE_JAX
 from repro.core.power import V5E
 from repro.serve.engine import Request
 from repro.telemetry import envelope_for
@@ -109,3 +110,89 @@ def test_cores_agree_under_consolidate_and_gate(raw, n_nodes):
          for e in vec.events]
     _assert_conserves(sched.ledger)
     _assert_conserves(vec.ledger)
+
+
+# -- stepped vs segment-batched ------------------------------------------
+
+#: random diurnal-ish scripts: clustered bursts with quiet stretches in
+#: between, so the segment engine's event-horizon batching actually
+#: collapses multi-step segments while gates/wakes and checkpoint
+#: boundaries land mid-stretch
+_DIURNAL_RAW = st.lists(
+    st.tuples(st.sampled_from([0, 1, 2, 3, 40, 41, 42, 90, 91, 140]),
+              st.integers(min_value=0, max_value=8),   # due jitter
+              st.integers(min_value=0, max_value=2),   # tenant
+              st.integers(min_value=1, max_value=6)),  # max_new
+    min_size=1, max_size=30)
+
+
+def _build_diurnal_script(raw):
+    return sorted((base + jitter, tenant, max_new)
+                  for base, jitter, tenant, max_new in raw)
+
+
+def _run_engines(raw, n_nodes, slots, loop_model, backend):
+    """One random diurnal script through the stepped reference and the
+    segment-batched engine; the planner is always on, so gate/wake
+    transitions and checkpoint boundaries fall inside quiet stretches."""
+    script = [(due, Request(rid=rid, prompt=np.full(3, 2, np.int32),
+                            max_new=max_new, tenant=f"team{tenant}"))
+              for rid, (due, tenant, max_new)
+              in enumerate(_build_diurnal_script(raw))]
+    policy = FleetPolicy(flush_every=4, checkpoint_every=8,
+                         router="energy", migrate_on_drift=False)
+    ppol = PowerPlanPolicy(
+        mode="gate", slo_queue_depth=2.0, plan_every=4, min_active=1,
+        min_active_steps=8, horizon_steps=32.0,
+        states=PowerStatePolicy(gate_watts=3.0, boot_energy_ws=2.0,
+                                warmup_steps=4, cooldown_steps=8))
+    env = envelope_for(V5E)
+    specs = [VectorNodeSpec(f"n{i}", env, slots=slots, step_s=TICK)
+             for i in range(n_nodes)]
+    ref = VectorFleet(specs, policy=policy, plan=ppol,
+                      loop_model=loop_model)
+    fin_ref = ref.run(script, max_steps=3000)
+    seg = SegmentFleet(specs, policy=policy, plan=ppol,
+                       loop_model=loop_model, backend=backend)
+    fin_seg = seg.run(script, max_steps=3000)
+    return ref, fin_ref, seg, fin_seg
+
+
+def _assert_engines_agree(ref, fin_ref, seg, fin_seg, rtol=1e-9):
+    assert fin_seg == fin_ref
+    assert seg.steps == ref.steps
+    assert [(e.step, e.node, e.action, tuple(e.moved_rids))
+            for e in seg.events] == \
+        [(e.step, e.node, e.action, tuple(e.moved_rids))
+         for e in ref.events]
+    a, b = ref.ledger, seg.ledger
+    assert abs(a.total_ws - b.total_ws) <= rtol * max(abs(a.total_ws), 1e-9)
+    assert set(a.cells) == set(b.cells)
+    for key, ca in a.cells.items():
+        cb = b.cells[key]
+        assert ca.count == cb.count, key
+        assert abs(ca.ws - cb.ws) <= rtol * max(abs(ca.ws), 1e-9), key
+
+
+@settings(max_examples=25, deadline=None)
+@given(raw=_DIURNAL_RAW,
+       n_nodes=st.integers(min_value=2, max_value=4),
+       slots=st.integers(min_value=1, max_value=3),
+       loop_model=st.sampled_from(["serve", "sim"]))
+def test_segment_engine_agrees_with_stepped(raw, n_nodes, slots,
+                                            loop_model):
+    ref, fin_ref, seg, fin_seg = _run_engines(raw, n_nodes, slots,
+                                              loop_model, "numpy")
+    _assert_engines_agree(ref, fin_ref, seg, fin_seg)
+    _assert_conserves(seg.ledger)
+
+
+@pytest.mark.skipif(not HAVE_JAX, reason="jax backend needs jax")
+@settings(max_examples=10, deadline=None)
+@given(raw=_DIURNAL_RAW,
+       n_nodes=st.integers(min_value=2, max_value=3))
+def test_jax_backend_agrees_with_stepped(raw, n_nodes):
+    ref, fin_ref, seg, fin_seg = _run_engines(raw, n_nodes, 2, "serve",
+                                              "jax")
+    _assert_engines_agree(ref, fin_ref, seg, fin_seg)
+    _assert_conserves(seg.ledger)
