@@ -66,12 +66,13 @@ Six workloads through one ``WsComparison`` pipeline:
                       ``REPRO_BENCH_FLEET_NODES``) run through every
                       vector engine — the stepped reference loop
                       (``vector``), the segment-batched core
-                      (``vector-seg``) and, when jax is importable, the
-                      jax booking backend (``vector-jax``) — reporting
-                      simulated arrivals/sec per arm, the segment/stepped
-                      speedup, and the cross-engine joule-equivalence
-                      verdict.  The segment arm is the perf trajectory
-                      ``BENCH_fleet.json`` tracks
+                      (``vector-seg``), the sharded segment core
+                      (``vector-shard``) and, when jax is importable,
+                      the jax booking backend (``vector-jax``) —
+                      reporting simulated arrivals/sec per arm, the
+                      segment/stepped speedup, and the cross-engine
+                      joule-equivalence verdict.  The segment arm is
+                      the perf trajectory ``BENCH_fleet.json`` tracks
                       (``scripts/perf_gate.py`` gates regressions);
   * ``fleet_diurnal_1m``
                     — the 10^6-arrival rung: a full simulated day of
@@ -80,7 +81,19 @@ Six workloads through one ``WsComparison`` pipeline:
                       over 1024 nodes on the segment engine, with the
                       per-hour consolidation curve (arrivals, powered
                       nodes, gates/wakes) reconstructed from the
-                      placement-event stream.
+                      placement-event stream;
+  * ``fleet_diurnal_10m``
+                    — the 10^7-arrival rung on the sharded engine
+                      (``REPRO_BENCH_FLEET_10M_ARRIVALS`` /
+                      ``_NODES``, default 10^7 over 8192): the
+                      shard-scaling curve across
+                      ``REPRO_BENCH_FLEET_10M_SHARDS`` (default
+                      ``1,2,4,8``) worker counts with wall / dispatch /
+                      route timings and their speedups vs 1 worker,
+                      plus bit-exact equivalence verdicts vs
+                      ``vector-seg`` on a
+                      ``REPRO_BENCH_FLEET_10M_VERIFY``-arrival prefix
+                      (default n/50; 0 skips).
 
 ``run()`` also leaves the structured comparisons in ``LAST_REPORT`` so the
 harness's ``--json-out`` can persist the numbers as a machine-readable
@@ -101,7 +114,8 @@ from repro.core.power import R740_ARRIA10
 from repro.core.verifier import Verifier
 from repro.fleet import (AdmissionController, FleetPolicy, FleetPowerPlanner,
                          FleetScheduler, Node, PowerPlanPolicy,
-                         PowerStatePolicy, SegmentFleet, VectorArrivals,
+                         PowerStatePolicy, SegmentFleet,
+                         ShardedSegmentFleet, VectorArrivals,
                          VectorFleet, VectorNodeSpec)
 from repro.fleet.jax_backend import HAVE_JAX
 from repro.kernels import ref
@@ -368,20 +382,24 @@ def _placement_serve(mode: str):
 
 def _vector_engines() -> list[str]:
     """The vector-core engines every equivalence verdict covers: the
-    stepped reference loop, the segment-batched core, and — when jax is
-    importable — the segment core with the jax booking backend."""
-    engines = ["vector", "vector-seg"]
+    stepped reference loop, the segment-batched core, the sharded
+    segment core, and — when jax is importable — the segment core with
+    the jax booking backend."""
+    engines = ["vector", "vector-seg", "vector-shard"]
     if HAVE_JAX:
         engines.append("vector-jax")
     return engines
 
 
 def _build_vector_fleet(engine: str, specs, *, policy, plan, admission=None,
-                        loop_model="serve"):
+                        loop_model="serve", shards=2, parallel="auto"):
     kw = dict(policy=policy, plan=plan, admission=admission,
               loop_model=loop_model)
     if engine == "vector":
         return VectorFleet(specs, **kw)
+    if engine == "vector-shard":
+        return ShardedSegmentFleet(specs, shards=shards,
+                                   parallel=parallel, **kw)
     backend = "jax" if engine == "vector-jax" else "numpy"
     return SegmentFleet(specs, backend=backend, **kw)
 
@@ -450,7 +468,8 @@ def _vector_equivalence(sched, finished, vec, fin_rids,
                        and total_rel <= rtol and worst <= rtol)}
 
 
-def _scale_fleet(engine: str, n_nodes: int):
+def _scale_fleet(engine: str, n_nodes: int, shards: int = 2,
+                 parallel: str = "auto"):
     """One consolidate-and-gate fleet at scale: slots=4, 4ms tick, plan
     every 16 steps, gating that actually pays (small boot energy) so the
     diurnal trough really consolidates."""
@@ -467,7 +486,7 @@ def _scale_fleet(engine: str, n_nodes: int):
         engine, specs,
         policy=FleetPolicy(flush_every=8, checkpoint_every=16,
                            migrate_on_drift=False),
-        plan=ppol)
+        plan=ppol, shards=shards, parallel=parallel)
 
 
 def _arm_equivalence(ref, vec, rtol: float = 1e-6) -> dict:
@@ -525,6 +544,11 @@ def _fleet_scale():
             "total_ws": vec.total_ws,
             "placement_events": len(vec.events),
             "gates": gates, "wakes": wakes}
+        # a vector-jax request without jax degrades (with a warning) to
+        # the numpy booking plane — the report records what actually ran
+        eff = vec.summary().get("backend_effective")
+        if eff is not None:
+            arms[engine]["backend_effective"] = eff
         lines.append(
             f"fleet_scale[{engine}]: {n_arrivals} arrivals over "
             f"{n_nodes} nodes in {wall:.2f}s wall "
@@ -643,6 +667,147 @@ def _fleet_diurnal_1m():
     return lines, doc
 
 
+def _shard_rung_fleet(engine: str, n_nodes: int, shards: int = 1,
+                      parallel: str = "auto"):
+    """The ``fleet_diurnal_10m`` fleet: a homogeneous 2-slot fleet in
+    the saturated regime (arrival rate ~2400/step against the active
+    set), where per-arrival routing dominates the wall clock — the
+    regime the sharded two-level argmin targets."""
+    env = node_envelope(R740_ARRIA10, accelerated=True)
+    specs = [VectorNodeSpec(f"pod{i:05d}", env, slots=2, step_s=0.004,
+                            max_seq=64) for i in range(n_nodes)]
+    ppol = PowerPlanPolicy(
+        mode="gate", slo_queue_depth=4.0, plan_every=16, min_active=8,
+        min_active_steps=64, horizon_steps=64.0,
+        states=PowerStatePolicy(gate_watts=3.0, boot_energy_ws=2.0,
+                                warmup_steps=8, cooldown_steps=32))
+    return _build_vector_fleet(
+        engine, specs,
+        policy=FleetPolicy(flush_every=8, checkpoint_every=16,
+                           migrate_on_drift=False),
+        plan=ppol, shards=shards, parallel=parallel)
+
+
+def _shard_rung_arrivals(n_arrivals: int):
+    """One simulated day at ~2400 arrivals/step whatever the scale —
+    the steps-per-hour follows the arrival count so a scaled-down CI
+    run exercises the same saturation the 10^7 rung measures."""
+    sph = max(int(round(n_arrivals / (2400.0 * 24))), 1)
+    return VectorArrivals.diurnal(n_arrivals, tenants=4, hours=24,
+                                  steps_per_hour=sph, max_new=8, seed=7)
+
+
+def _fleet_diurnal_10m():
+    """The 10^7-arrival rung: the sharded segment engine over 8192
+    nodes, swept across worker counts (default 1/2/4/8) for the
+    shard-scaling curve.  Each arm reports three timings:
+
+      * ``wall_seconds`` — the whole run;
+      * ``dispatch_seconds`` — the arrival-dispatch loop (routing plus
+        submit bookkeeping), the per-arrival hot path;
+      * ``route_seconds`` — the two-level argmin alone (dirty-shard
+        rescan + cross-shard reduce), the cost sharding divides.
+
+    The route curve is the headline (per-arrival routing work is
+    O(C/w + w)); wall and dispatch carry a shard-count-independent
+    floor (ring writes, meters, the Python submit loop) documented in
+    docs/fleet_scale.md, so their curves saturate lower.  Equivalence
+    verdicts vs ``vector-seg`` run at a smaller verification scale —
+    the ledgers are bit-identical by contract, which a 2% prefix
+    pins as cheaply as the full stream."""
+    n_nodes = int(os.environ.get("REPRO_BENCH_FLEET_10M_NODES", "8192"))
+    n_arrivals = int(os.environ.get("REPRO_BENCH_FLEET_10M_ARRIVALS",
+                                    "10000000"))
+    shard_counts = [int(x) for x in
+                    os.environ.get("REPRO_BENCH_FLEET_10M_SHARDS",
+                                   "1,2,4,8").split(",") if x]
+    verify_arrivals = int(os.environ.get(
+        "REPRO_BENCH_FLEET_10M_VERIFY", str(max(n_arrivals // 50, 1))))
+    arrivals = _shard_rung_arrivals(n_arrivals)
+    lines, curve = [], []
+    for w in shard_counts:
+        vec = _shard_rung_fleet("vector-shard", n_nodes, shards=w)
+        t0 = time.perf_counter()
+        finished = vec.run(arrivals, max_steps=10_000_000)
+        wall = time.perf_counter() - t0
+        summ = vec.summary()
+        arm = {"shards": w, "parallel": summ.get("parallel"),
+               "wall_seconds": wall,
+               "dispatch_seconds": summ.get("dispatch_s"),
+               "route_seconds": summ.get("route_s"),
+               "arrivals_per_sec": n_arrivals / max(wall, 1e-9),
+               "finished": len(finished), "steps": vec.steps,
+               "total_ws": vec.total_ws,
+               "placement_events": len(vec.events)}
+        curve.append(arm)
+        lines.append(
+            f"fleet_diurnal_10m[shards={w}]: {n_arrivals} arrivals "
+            f"over {n_nodes} nodes in {wall:.2f}s wall "
+            f"(dispatch {arm['dispatch_seconds']:.2f}s, route "
+            f"{arm['route_seconds']:.2f}s, "
+            f"{arm['arrivals_per_sec']:,.0f} arrivals/sec)")
+    base = curve[0]
+    for arm in curve:
+        for field_, out in (("wall_seconds", "wall_speedup_vs_1"),
+                            ("dispatch_seconds",
+                             "dispatch_speedup_vs_1"),
+                            ("route_seconds", "route_speedup_vs_1")):
+            arm[out] = base[field_] / max(arm[field_], 1e-9)
+    best = max(curve, key=lambda a: a["route_speedup_vs_1"])
+    lines.append(
+        "fleet_diurnal_10m curve (shards: wall/dispatch/route speedup "
+        "vs 1): " + "; ".join(
+            f"{a['shards']}: {a['wall_speedup_vs_1']:.2f}x/"
+            f"{a['dispatch_speedup_vs_1']:.2f}x/"
+            f"{a['route_speedup_vs_1']:.2f}x" for a in curve))
+    # cross-engine verdicts at the verification scale: the sharded
+    # ledgers and event streams must be *bit-identical* to vector-seg
+    # (rtol=0), at every shard count the curve ran
+    equivalence = {}
+    if verify_arrivals > 0:
+        v_arr = _shard_rung_arrivals(verify_arrivals)
+        seg = _shard_rung_fleet("vector-seg", n_nodes)
+        seg.run(v_arr, max_steps=10_000_000)
+        for w in shard_counts:
+            shd = _shard_rung_fleet("vector-shard", n_nodes, shards=w)
+            shd.run(v_arr, max_steps=10_000_000)
+            equiv = _arm_equivalence(seg, shd, rtol=0.0)
+            equivalence[str(w)] = equiv
+            lines.append(
+                f"fleet_diurnal_10m[shards={w}] vs vector-seg "
+                f"({verify_arrivals} arrivals): "
+                f"{'OK' if equiv['ok'] else 'MISMATCH'} "
+                f"(total {equiv['total_ws_rel_delta']:.2e} rel, "
+                f"max cell {equiv['max_rel_cell_delta']:.2e} rel, "
+                f"events_match={equiv['events_match']})")
+    lead = curve[-1]
+    vec_last = vec  # the widest arm — the headline configuration
+    _record_metrics("fleet_diurnal_10m", vec_last,
+                    lead["wall_seconds"], n_arrivals)
+    LAST_METRICS[-1]["metrics"].update({
+        "nodes": n_nodes, "arrivals": n_arrivals,
+        "engine": "vector-shard", "shards": lead["shards"],
+        "dispatch_seconds": lead["dispatch_seconds"],
+        "route_seconds": lead["route_seconds"],
+        "wall_speedup_vs_1": lead["wall_speedup_vs_1"],
+        "dispatch_speedup_vs_1": lead["dispatch_speedup_vs_1"],
+        "route_speedup_vs_1": lead["route_speedup_vs_1"],
+        "best_route_speedup": best["route_speedup_vs_1"],
+        "best_route_speedup_shards": best["shards"]})
+    doc = {"workload": "fleet_diurnal_10m", "engine": "vector-shard",
+           "nodes": n_nodes, "arrivals": n_arrivals,
+           "shard_counts": shard_counts, "curve": curve,
+           "best_route_speedup": best["route_speedup_vs_1"],
+           "best_route_speedup_shards": best["shards"],
+           "verify_arrivals": verify_arrivals,
+           "equivalence": equivalence}
+    for key in ("finished", "steps", "wall_seconds", "dispatch_seconds",
+                "route_seconds", "arrivals_per_sec", "total_ws",
+                "placement_events"):
+        doc[key] = lead[key]
+    return lines, doc
+
+
 def _placement_comparison():
     """Always-on vs consolidate-and-gate over the same diurnal script."""
     sched_on, fin_on, _, _ = _placement_serve("always_on")
@@ -702,12 +867,14 @@ def run() -> list[str]:
     comparisons.append(place_cmp)
     scale_lines, scale_doc = _fleet_scale()
     diurnal_lines, diurnal_doc = _fleet_diurnal_1m()
+    rung_lines, rung_doc = _fleet_diurnal_10m()
     LAST_REPORT.clear()
     LAST_REPORT.extend(c.to_dict() for c in comparisons[:-2])
     LAST_REPORT.append(fleet_doc)
     LAST_REPORT.append(place_doc)
     LAST_REPORT.append(scale_doc)
     LAST_REPORT.append(diurnal_doc)
+    LAST_REPORT.append(rung_doc)
     for cmp_ in comparisons:
         lines.extend(render_comparison_csv(cmp_))
         lines.extend(render_comparison_text(cmp_))
@@ -719,6 +886,8 @@ def run() -> list[str]:
     lines.extend(scale_lines)
     lines.append("")
     lines.extend(diurnal_lines)
+    lines.append("")
+    lines.extend(rung_lines)
     lines.append("")
     lines.append(f"# {len(comparisons)} Ws comparisons "
                  f"in {time.time()-t0:.1f}s")

@@ -36,6 +36,25 @@ SUITES = {
 }
 
 
+def _export_fleet_baseline() -> None:
+    """Mirror the committed fleet baseline to the repo root.
+
+    Every power-suite run leaves ``BENCH_fleet.json`` next to the
+    checkout root so the CI artifact step (and anyone triaging a local
+    run) always has the file, even when a later step fails before the
+    fresh report is composed — CI then overwrites it with the
+    fresh-composed doc from ``power-report.json``."""
+    src = Path(__file__).resolve().parent / "data" / "BENCH_fleet.json"
+    if not src.is_file():
+        return
+    dst = Path.cwd() / "BENCH_fleet.json"
+    try:
+        dst.write_text(src.read_text())
+        print(f"# fleet baseline -> {dst}", flush=True)
+    except OSError as e:  # read-only checkout: artifact is best-effort
+        print(f"# fleet baseline copy skipped: {e}", flush=True)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -96,6 +115,8 @@ def main() -> None:
             entry["error"] = f"{type(e).__name__}: {e}"
             print(f"# {name} FAILED: {type(e).__name__}: {e}", flush=True)
         doc["suites"][name] = entry
+        if name == "power":
+            _export_fleet_baseline()
     if args.json_out:
         out = Path(args.json_out)
         out.parent.mkdir(parents=True, exist_ok=True)

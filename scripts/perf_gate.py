@@ -2,23 +2,37 @@
 
     python scripts/perf_gate.py --report power-report.json \
         [--baseline benchmarks/data/BENCH_fleet.json] \
-        [--warn-below 0.7] [--fail-below 0.4]
+        [--warn-below 0.7] [--fail-below 0.4] \
+        [--require fleet_scale,fleet_diurnal_10m]
 
-Compares the fresh run's ``metrics.fleet_scale.arrivals_per_sec``
-(``benchmarks/run.py --json-out`` report, or a ``BENCH_fleet.json``-shaped
-doc — auto-detected) against the committed baseline at
-``benchmarks/data/BENCH_fleet.json``:
+Two gates, both read from either report shape (``benchmarks/run.py
+--json-out`` report, or a ``BENCH_fleet.json``-shaped doc —
+auto-detected):
 
-  * ratio >= ``--warn-below`` (default 0.7)  -> OK, exit 0;
-  * ratio in [``--fail-below``, warn)        -> WARN, exit 0 (prints the
-    regression loudly so the CI log shows it);
-  * ratio <  ``--fail-below`` (default 0.4)  -> FAIL, exit 1.
+* ``fleet_scale`` — the fresh run's ``arrivals_per_sec`` against the
+  committed baseline:
 
-The ratio is only meaningful config-matched: when the fresh run's
-``nodes``/``arrivals`` differ from the baseline's (someone set
-``REPRO_BENCH_FLEET_NODES`` locally), the gate SKIPs with exit 0 —
+    - ratio >= ``--warn-below`` (default 0.7)  -> OK, exit 0;
+    - ratio in [``--fail-below``, warn)        -> WARN, exit 0 (prints
+      the regression loudly so the CI log shows it);
+    - ratio <  ``--fail-below`` (default 0.4)  -> FAIL, exit 1.
+
+* ``fleet_diurnal_10m`` — the shard-scaling rung.  The committed
+  baseline curve must show the route-phase speedup the sharded engine
+  is sold on (>= ``--min-route-speedup``, default 2.0, at 4 workers
+  over 1); a config-matched fresh run is then compared against the
+  baseline's best route speedup with the same warn/fail bands.
+
+Workloads named in ``--require`` (default: both gates) must be present
+in the fresh report — a missing row is a hard FAIL with the workload
+named, not an IndexError three expressions later.  The ratio gates are
+only meaningful config-matched: when the fresh run's
+``nodes``/``arrivals``/``shard_counts`` differ from the baseline's
+(someone set ``REPRO_BENCH_FLEET_NODES`` or the ``_10M_`` knobs
+locally, or CI ran the reduced rung), that comparison SKIPs —
 arrivals/sec is not comparable across fleet widths (routing is O(N)
-per arrival).  No deps beyond the stdlib — runs on the bare CI image.
+per arrival) and speedups are not comparable across shard sweeps.
+No deps beyond the stdlib — runs on the bare CI image.
 """
 import argparse
 import json
@@ -36,6 +50,138 @@ def fleet_metrics(doc: dict) -> dict | None:
     return (doc.get("metrics") or {}).get("fleet_scale")  # run.py report
 
 
+def rung_doc(doc: dict) -> dict | None:
+    """Pull the fleet_diurnal_10m rung out of either report shape.
+
+    ``BENCH_fleet.json`` embeds the full rung doc under
+    ``diurnal_10m``; a ``run.py --json-out`` report carries it as the
+    ``fleet_diurnal_10m`` row of the power-suite report (with the flat
+    metrics block as a fallback when only metrics were kept)."""
+    if doc.get("workload") == "fleet_scale":          # BENCH_fleet.json
+        return doc.get("diurnal_10m")
+    rows = (((doc.get("suites") or {}).get("power") or {})
+            .get("report") or [])
+    for row in rows:
+        if row.get("workload") == "fleet_diurnal_10m":
+            return row
+    return (doc.get("metrics") or {}).get("fleet_diurnal_10m")
+
+
+def present_workloads(doc: dict) -> set:
+    """Every workload the report carries, across both shapes."""
+    found = set()
+    if doc.get("workload") == "fleet_scale":          # BENCH_fleet.json
+        found.add("fleet_scale")
+        if doc.get("diurnal_1m"):
+            found.add("fleet_diurnal_1m")
+        if doc.get("diurnal_10m"):
+            found.add("fleet_diurnal_10m")
+        return found
+    rows = (((doc.get("suites") or {}).get("power") or {})
+            .get("report") or [])
+    found.update(r.get("workload") for r in rows if r.get("workload"))
+    found.update((doc.get("metrics") or {}).keys())
+    return found
+
+
+def route_speedup_at(doc: dict, shards: int) -> float | None:
+    """The route-phase speedup at the given worker count, from the
+    persisted curve (preferred) or the flat best_* fields."""
+    for arm in doc.get("curve") or []:
+        if arm.get("shards") == shards:
+            return arm.get("route_speedup_vs_1")
+    if doc.get("best_route_speedup_shards") == shards:
+        return doc.get("best_route_speedup")
+    return None
+
+
+def band(name: str, ratio: float, line: str, warn: float,
+         fail: float) -> int:
+    if ratio < fail:
+        print(f"perf-gate: FAIL — {name}: {line} (< {fail:g}x)")
+        return 1
+    if ratio < warn:
+        print(f"perf-gate: WARN — {name}: {line} (< {warn:g}x; "
+              f"CI-runner jitter or a real regression — check the "
+              f"profile artifact)")
+        return 0
+    print(f"perf-gate: OK — {name}: {line}")
+    return 0
+
+
+def gate_scale(base_doc: dict, fresh_doc: dict, warn: float,
+               fail: float) -> int:
+    base = fleet_metrics(base_doc)
+    fresh = fleet_metrics(fresh_doc)
+    if not base or not fresh:
+        print("perf-gate: SKIP — fleet_scale metrics missing from "
+              f"{'baseline' if not base else 'report'}")
+        return 0
+    for key in ("nodes", "arrivals"):
+        if base.get(key) != fresh.get(key):
+            print(f"perf-gate: SKIP — fleet_scale config mismatch on "
+                  f"{key} (baseline {base.get(key)}, fresh "
+                  f"{fresh.get(key)}); arrivals/sec is only "
+                  f"comparable config-matched")
+            return 0
+    ratio = fresh["arrivals_per_sec"] / max(base["arrivals_per_sec"],
+                                            1e-9)
+    return band(
+        "fleet_scale", ratio,
+        f"arrivals/sec fresh {fresh['arrivals_per_sec']:,.0f} vs "
+        f"baseline {base['arrivals_per_sec']:,.0f} -> {ratio:.2f}x "
+        f"({fresh.get('nodes')} nodes, {fresh.get('arrivals')} "
+        f"arrivals)", warn, fail)
+
+
+def gate_rung(base_doc: dict, fresh_doc: dict, warn: float, fail: float,
+              min_route: float) -> int:
+    base = rung_doc(base_doc)
+    fresh = rung_doc(fresh_doc)
+    if not base:
+        print("perf-gate: SKIP — fleet_diurnal_10m missing from the "
+              "baseline (pre-rung baseline file); regenerate "
+              "benchmarks/data/BENCH_fleet.json to arm this gate")
+        return 0
+    # the committed curve IS the perf claim: the two-level argmin must
+    # keep paying >= min_route at 4 workers over 1 on the rung config
+    claimed = route_speedup_at(base, 4)
+    if claimed is None:
+        print("perf-gate: FAIL — fleet_diurnal_10m baseline carries no "
+              "route speedup at 4 workers (curve incomplete)")
+        return 1
+    if claimed < min_route:
+        print(f"perf-gate: FAIL — fleet_diurnal_10m baseline route "
+              f"speedup at 4 workers is {claimed:.2f}x "
+              f"(< {min_route:g}x); the sharded engine no longer "
+              f"clears its headline rung")
+        return 1
+    print(f"perf-gate: OK — fleet_diurnal_10m baseline route speedup "
+          f"at 4 workers: {claimed:.2f}x (>= {min_route:g}x)")
+    if not fresh:
+        return 0
+    for key in ("nodes", "arrivals", "shard_counts"):
+        if base.get(key) != fresh.get(key):
+            print(f"perf-gate: SKIP — fleet_diurnal_10m config "
+                  f"mismatch on {key} (baseline {base.get(key)}, "
+                  f"fresh {fresh.get(key)}); speedups are only "
+                  f"comparable across identical sweeps")
+            return 0
+    b = base.get("best_route_speedup") or route_speedup_at(base, 4)
+    f = fresh.get("best_route_speedup") or route_speedup_at(fresh, 4)
+    if not b or not f:
+        print("perf-gate: SKIP — fleet_diurnal_10m best_route_speedup "
+              "missing from a config-matched pair")
+        return 0
+    ratio = f / max(b, 1e-9)
+    return band(
+        "fleet_diurnal_10m", ratio,
+        f"best route speedup fresh {f:.2f}x vs baseline {b:.2f}x "
+        f"-> {ratio:.2f}x ({fresh.get('nodes')} nodes, "
+        f"{fresh.get('arrivals')} arrivals, shards "
+        f"{fresh.get('shard_counts')})", warn, fail)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--report", required=True,
@@ -44,43 +190,45 @@ def main() -> int:
     ap.add_argument("--baseline", default=str(BASELINE))
     ap.add_argument("--warn-below", type=float, default=0.7)
     ap.add_argument("--fail-below", type=float, default=0.4)
+    ap.add_argument("--min-route-speedup", type=float, default=2.0,
+                    help="floor on the baseline curve's route-phase "
+                         "speedup at 4 workers (the rung's headline)")
+    ap.add_argument("--require",
+                    default="fleet_scale,fleet_diurnal_10m",
+                    help="comma-separated workloads that must be "
+                         "present in the fresh report; a missing one "
+                         "is a named FAIL (empty string disables)")
     args = ap.parse_args()
 
     try:
-        base = fleet_metrics(json.loads(Path(args.baseline).read_text()))
+        base_doc = json.loads(Path(args.baseline).read_text())
     except (OSError, ValueError) as e:
         print(f"perf-gate: SKIP — no readable baseline "
               f"({args.baseline}: {e})")
         return 0
-    fresh = fleet_metrics(json.loads(Path(args.report).read_text()))
-    if not base or not fresh:
-        print("perf-gate: SKIP — fleet_scale metrics missing from "
-              f"{'baseline' if not base else 'report'}")
-        return 0
-
-    for key in ("nodes", "arrivals"):
-        if base.get(key) != fresh.get(key):
-            print(f"perf-gate: SKIP — config mismatch on {key} "
-                  f"(baseline {base.get(key)}, fresh {fresh.get(key)}); "
-                  f"arrivals/sec is only comparable config-matched")
-            return 0
-
-    ratio = fresh["arrivals_per_sec"] / max(base["arrivals_per_sec"], 1e-9)
-    line = (f"fleet_scale arrivals/sec: fresh "
-            f"{fresh['arrivals_per_sec']:,.0f} vs baseline "
-            f"{base['arrivals_per_sec']:,.0f} -> {ratio:.2f}x "
-            f"({fresh.get('nodes')} nodes, {fresh.get('arrivals')} "
-            f"arrivals)")
-    if ratio < args.fail_below:
-        print(f"perf-gate: FAIL — {line} (< {args.fail_below:g}x)")
+    try:
+        fresh_doc = json.loads(Path(args.report).read_text())
+    except (OSError, ValueError) as e:
+        print(f"perf-gate: FAIL — no readable fresh report "
+              f"({args.report}: {e})")
         return 1
-    if ratio < args.warn_below:
-        print(f"perf-gate: WARN — {line} (< {args.warn_below:g}x; "
-              f"CI-runner jitter or a real regression — check the "
-              f"profile artifact)")
-        return 0
-    print(f"perf-gate: OK — {line}")
-    return 0
+
+    rc = 0
+    required = [w for w in args.require.split(",") if w]
+    if required:
+        have = present_workloads(fresh_doc)
+        for wl in required:
+            if wl not in have:
+                print(f"perf-gate: FAIL — required workload '{wl}' is "
+                      f"missing from {args.report}; the bench run "
+                      f"dropped a gated rung (present: "
+                      f"{sorted(have)})")
+                rc = 1
+    rc = max(rc, gate_scale(base_doc, fresh_doc, args.warn_below,
+                            args.fail_below))
+    rc = max(rc, gate_rung(base_doc, fresh_doc, args.warn_below,
+                           args.fail_below, args.min_route_speedup))
+    return rc
 
 
 if __name__ == "__main__":

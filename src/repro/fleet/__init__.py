@@ -33,5 +33,6 @@ from repro.fleet.power import (ArrivalForecaster,  # noqa: F401
 from repro.fleet.scheduler import (FleetEvent, FleetPolicy,  # noqa: F401
                                    FleetScheduler, normalize_arrivals)
 from repro.fleet.segment import SegmentFleet  # noqa: F401
+from repro.fleet.shard import ShardedSegmentFleet  # noqa: F401
 from repro.fleet.vector import (VectorArrivals, VectorFleet,  # noqa: F401
                                 VectorNodeSpec)

@@ -45,6 +45,145 @@ except Exception:                       # pragma: no cover
 #: records folded per compiled scan call (padded to this length)
 CHUNK = 64
 
+# ----------------------------------------------------------------------
+# control-plane kernels
+# ----------------------------------------------------------------------
+#
+# The routing argmin and the planner's Erlang-C k-search are the two
+# control-plane hot spots.  Both ship here as jit-compiled twins of the
+# numpy reference implementations below — numpy stays the bit-exact
+# reference the engines run on (placement control flow reads these
+# live), the jax twins are the accelerator path for offline sweeps and
+# the planner's ``backend="jax"`` opt-in.  The equivalence contract
+# (tests/test_fleet_jax_kernels.py) pins the jax results to the numpy
+# references: integer winners exactly, Lq floats within reduction-
+# reorder distance.
+
+
+def route_argmin_np(marg, load, rank, active):
+    """Reference energy-router winner: lowest marginal Ws/token among
+    ``active`` nodes, float-equal marginal ties broken by lowest load,
+    load ties by lowest name rank.  Returns -1 with no active node."""
+    marg = np.asarray(marg, np.float64)
+    active = np.asarray(active, bool)
+    idxs = np.flatnonzero(active)
+    if idxs.size == 0:
+        return -1
+    mc = marg[idxs]
+    ti = idxs[mc == mc.min()]
+    if ti.size > 1:
+        lc = np.asarray(load, np.float64)[ti]
+        ti = ti[lc == lc.min()]
+        if ti.size > 1:
+            rc = np.asarray(rank)[ti]
+            return int(ti[rc.argmin()])
+    return int(ti[0])
+
+
+def _build_route_kernel():
+    """jit twin of ``route_argmin_np``: one masked three-level
+    lexicographic argmin over the watt-table marginal costs.  Inactive
+    lanes are padded to +inf so they never win (the stepped engine's
+    inf-padding contract); the final argmin runs on the rank column,
+    which is a permutation, so the winner is unique."""
+    def kernel(marg, load, rank, active):
+        inf = jnp.asarray(jnp.inf, marg.dtype)
+        m = jnp.where(active, marg, inf)
+        t1 = active & (m == m.min())
+        l = jnp.where(t1, load, inf)
+        t2 = t1 & (l == l.min())
+        r = jnp.where(t2, rank, jnp.asarray(jnp.iinfo(rank.dtype).max,
+                                            rank.dtype))
+        return jnp.where(active.any(), jnp.argmin(r), -1)
+    return jax.jit(kernel)
+
+
+_route_kernel = None
+
+
+def route_argmin_jax(marg, load, rank, active):
+    """Run the jit routing kernel (compiled once, float64-scoped)."""
+    global _route_kernel
+    if not HAVE_JAX:
+        raise RuntimeError("route_argmin_jax needs jax installed")
+    with enable_x64():
+        if _route_kernel is None:
+            _route_kernel = _build_route_kernel()
+        return int(_route_kernel(jnp.asarray(marg, jnp.float64),
+                                 jnp.asarray(load, jnp.float64),
+                                 jnp.asarray(rank, jnp.int64),
+                                 jnp.asarray(active, bool)))
+
+
+def _build_lq_kernel(c_max: int):
+    """jit twin of ``ArrivalForecaster.expected_queue_depth_many``:
+    price every candidate server count in one pass.  The term chain is
+    one cumprod and the partial sums one cumsum (the scalar Erlang-C's
+    sequential reductions), followed by gathers at each candidate —
+    the same op sequence as the numpy sweep, so the floats land within
+    reduction-reorder distance of the reference.  ``c_max`` (the
+    largest candidate count — the fleet's total slots in the planner's
+    k-search) is static, so one compilation serves a whole run."""
+    def kernel(servers, lam, mu, horizon):
+        servers = jnp.maximum(servers, 1)
+        offered = lam / mu
+        terms = (jnp.cumprod(offered / jnp.arange(1, c_max,
+                                                  dtype=jnp.float64))
+                 if c_max > 1 else jnp.zeros(0, jnp.float64))
+        partial_all = jnp.cumsum(
+            jnp.concatenate([jnp.ones(1, jnp.float64), terms]))
+        partial = partial_all[servers - 1]
+        term = (jnp.where(servers > 1,
+                          terms[jnp.maximum(servers - 2, 0)], 1.0)
+                if c_max > 1 else jnp.ones(servers.shape, jnp.float64))
+        term = term * (offered / servers)
+        rho = offered / servers
+        last = term / jnp.maximum(1.0 - rho, _MIN_GAP_J)
+        denom = partial + last
+        p_wait = jnp.where(
+            (denom <= 0.0) | ~jnp.isfinite(denom), 1.0,
+            jnp.clip(last / jnp.where(denom != 0.0, denom, 1.0),
+                     0.0, 1.0))
+        lq = p_wait * rho / jnp.maximum(1.0 - rho, _MIN_GAP_J)
+        lq = jnp.where(jnp.isfinite(lq), jnp.maximum(lq, 0.0),
+                       horizon * mu)
+        h = jnp.maximum(horizon, 1.0)
+        sat = lam * h + jnp.maximum((lam - servers * mu) * h, 0.0)
+        return jnp.where(rho >= 1.0, sat, lq)
+    return jax.jit(kernel)
+
+
+_MIN_GAP_J = 1e-6                       # forecast.py's _MIN_GAP
+_lq_kernels: dict = {}
+
+
+def expected_queue_depth_many_jax(servers, service_time, lam,
+                                  horizon=64.0):
+    """jit Erlang-C sweep over candidate server counts.
+
+    Mirrors ``ArrivalForecaster.expected_queue_depth_many`` given the
+    same forecast rate ``lam``.  Kernels are cached per (chain length,
+    candidate count) — both fixed for a given fleet, so the planner
+    pays one trace on its first window and jit dispatch after."""
+    if not HAVE_JAX:
+        raise RuntimeError(
+            "expected_queue_depth_many_jax needs jax installed")
+    servers = np.maximum(np.asarray(servers, np.int64), 1)
+    if servers.size == 0:
+        return np.zeros(0)
+    service_time = max(float(service_time), _MIN_GAP_J)
+    c_max = int(servers.max())
+    with enable_x64():
+        key = (c_max, servers.size)
+        kern = _lq_kernels.get(key)
+        if kern is None:
+            kern = _lq_kernels[key] = _build_lq_kernel(c_max)
+        out = kern(jnp.asarray(servers),
+                   jnp.float64(lam),
+                   jnp.float64(1.0 / service_time),
+                   jnp.float64(max(float(horizon), 0.0)))
+        return np.asarray(out)
+
 
 def _dec_scan(chunk: int):
     """Build the decode-cell fold: carry += one chunk of dec records."""

@@ -21,8 +21,11 @@ forecasts logged) but never gates — the baseline arm of the
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional
+
+import numpy as np
 
 from repro import obs
 from repro.fleet.power.forecast import ArrivalForecaster
@@ -103,7 +106,24 @@ class FleetPowerPlanner:
     """
 
     def __init__(self, policy: Optional[PowerPlanPolicy] = None,
-                 forecaster: Optional[ArrivalForecaster] = None):
+                 forecaster: Optional[ArrivalForecaster] = None,
+                 backend: str = "numpy"):
+        if backend not in ("numpy", "jax"):
+            raise ValueError("backend must be 'numpy' or 'jax', got "
+                             f"{backend!r}")
+        self.backend_requested = backend
+        if backend == "jax":
+            from repro.fleet.jax_backend import HAVE_JAX
+            if not HAVE_JAX:
+                # numpy is the bit-exact reference; a missing jax only
+                # costs the jit, never the placement decisions
+                warnings.warn(
+                    "backend='jax' requested for FleetPowerPlanner but "
+                    "jax is not importable — falling back to the numpy "
+                    "Erlang-C sweep (same placements, no jit)",
+                    RuntimeWarning, stacklevel=2)
+                backend = "numpy"
+        self.backend = backend
         self.policy = policy or PowerPlanPolicy()
         self.forecaster = forecaster or ArrivalForecaster()
         self.events: list[PlacementEvent] = []
@@ -187,13 +207,24 @@ class FleetPowerPlanner:
         rate = self.forecaster.rate(now=step)
         backlog = self._backlog() + sum(n.occupied for n in ranked)
         k, lq = len(ranked), 0.0        # nothing meets the SLO: all hands
-        for i in range(pol.min_active, len(ranked) + 1):
-            slots = sum(n.slots for n in ranked[:i])
-            lq = self.forecaster.expected_queue_depth(
-                slots, service, now=step, horizon=pol.horizon_steps)
-            if max(lq, backlog - slots) <= pol.slo_queue_depth:
-                k = i
-                break
+        if pol.min_active <= len(ranked):
+            # one Erlang-C sweep prices every candidate prefix; the
+            # first count meeting the SLO is the reference scalar
+            # loop's break point (expected_queue_depth_many is
+            # bit-identical per element to the scalar call)
+            slots_cum = np.cumsum([n.slots for n in ranked])
+            cand = np.arange(pol.min_active, len(ranked) + 1)
+            slots_c = slots_cum[cand - 1]
+            lqs = self._lq_sweep(slots_c, service, step,
+                                 pol.horizon_steps)
+            hits = np.flatnonzero(
+                np.maximum(lqs, backlog - slots_c)
+                <= pol.slo_queue_depth)
+            if hits.size:
+                k = int(cand[hits[0]])
+                lq = float(lqs[hits[0]])
+            else:
+                lq = float(lqs[-1])     # the all-hands forecast
         keep = {n.name for n in ranked[:k]}
         tr = obs.TRACER
         if tr.enabled:
@@ -218,6 +249,23 @@ class FleetPowerPlanner:
                   and step - m.since_step >= pol.min_active_steps
                   and self._gate_pays(m)):
                 self._park_pending(step, node, "gate", rate, lq, k)
+
+    def _lq_sweep(self, slots_c, service: float, step: int,
+                  horizon: float):
+        """Expected queue depth for every candidate slot count — the
+        jit kernel when ``backend="jax"``, the numpy sweep otherwise
+        (and as the fallback if the jit path raises)."""
+        if self.backend == "jax":
+            from repro.fleet.jax_backend import \
+                expected_queue_depth_many_jax
+            try:
+                return expected_queue_depth_many_jax(
+                    slots_c, service,
+                    self.forecaster.rate(now=step), horizon)
+            except Exception:           # pragma: no cover - jit trouble
+                pass
+        return self.forecaster.expected_queue_depth_many(
+            slots_c, service, now=step, horizon=horizon)
 
     def _gate_pays(self, m: NodePowerState) -> bool:
         """Gating is worth it only when the floor-vs-parked savings over
@@ -340,6 +388,8 @@ class FleetPowerPlanner:
 
     def summary(self) -> dict:
         return {"mode": self.policy.mode,
+                "backend_requested": self.backend_requested,
+                "backend_effective": self.backend,
                 "slo_queue_depth": self.policy.slo_queue_depth,
                 "max_queue_depth": self.max_queue_depth,
                 "states": dict(self.states),

@@ -335,6 +335,7 @@ class VectorFleet:
         self._name_rank = np.empty(n, np.int64)
         for r, i in enumerate(sorted(range(n), key=lambda i: names[i])):
             self._name_rank[i] = r
+        self._iota = np.arange(n)       # reused by the routing hot path
 
         # -- mutable node state ---------------------------------------
         self.steps = 0
@@ -495,7 +496,7 @@ class VectorFleet:
         n_next = self._occupied + self._queued + 1
         m_occ = np.minimum(n_next, self._slots)
         dt = self._recent_dt()
-        w = self._occ_w[np.arange(self.n), m_occ]
+        w = self._occ_w[self._iota, m_occ]
         share = w * dt / np.maximum(m_occ, 1)
         overload = np.maximum(n_next - self._slots, 0)
         marg = share * (1.0 + overload / np.maximum(self._slots, 1))

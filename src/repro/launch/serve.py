@@ -150,7 +150,17 @@ def run_vector(args) -> None:
     if args.engine == "vector":
         vec = VectorFleet(specs, policy=policy, plan=plan,
                           admission=admission, loop_model="serve")
+    elif args.engine == "vector-shard":
+        from repro.fleet.shard import ShardedSegmentFleet
+        vec = ShardedSegmentFleet(specs, policy=policy, plan=plan,
+                                  admission=admission,
+                                  loop_model="serve",
+                                  shards=args.shard_workers,
+                                  parallel=args.shard_parallel)
     else:
+        # a vector-jax request without jax warns and degrades to the
+        # numpy booking plane inside SegmentFleet — same ledger floats,
+        # no jit — so scripted runs never die on an optional dep
         backend = "jax" if args.engine == "vector-jax" else "numpy"
         vec = SegmentFleet(specs, policy=policy, plan=plan,
                            admission=admission, loop_model="serve",
@@ -230,15 +240,27 @@ def main() -> None:
     ap.add_argument("--fleet", type=int, default=1,
                     help="number of serving nodes under the scheduler")
     ap.add_argument("--engine", default="object",
-                    choices=("object", "vector", "vector-seg", "vector-jax"),
+                    choices=("object", "vector", "vector-seg", "vector-jax",
+                             "vector-shard"),
                     help="fleet core: the object-level reference "
                          "(ServeLoop per node, real jax decode), the "
                          "stepped repro.fleet.vector core (numpy node "
                          "arrays, joule-equivalent by contract, no model), "
                          "the event-horizon segment engine (vector-seg: "
                          "quiet stretches advance in one batched update), "
-                         "or the segment engine with the jax lax.scan "
-                         "booking backend (vector-jax)")
+                         "the segment engine with the jax lax.scan "
+                         "booking backend (vector-jax), or the sharded "
+                         "segment engine (vector-shard: node shards with "
+                         "a two-level routing argmin, bit-identical "
+                         "ledger to vector-seg)")
+    ap.add_argument("--shard-workers", type=int, default=2,
+                    help="vector-shard: node shards (1/2/4/8...)")
+    ap.add_argument("--shard-parallel", default="auto",
+                    choices=("auto", "inline", "process"),
+                    help="vector-shard booking plane: shared-memory "
+                         "worker processes, the in-process fold (bit-"
+                         "identical), or auto (processes only when more "
+                         "than one CPU is usable)")
     ap.add_argument("--tick", type=float, default=0.004,
                     help="vector engine: virtual TickClock seconds per "
                          "decode/prefill/idle window")
@@ -309,12 +331,6 @@ def main() -> None:
                 ap.error(f"{name} is object-engine only (per-node "
                          f"governors and power traces need the object "
                          f"loops) — drop it or use --engine object")
-    if args.engine == "vector-jax":
-        from repro.fleet.jax_backend import HAVE_JAX
-        if not HAVE_JAX:
-            ap.error("--engine vector-jax needs jax installed — use "
-                     "--engine vector-seg (same segment core, numpy "
-                     "booking) instead")
     if args.trace_spans or args.metrics_out:
         obs.enable()
     if args.engine != "object":

@@ -1,0 +1,133 @@
+"""The jax control-plane kernels vs their numpy references.
+
+Two jit kernels back the fleet control plane when jax is importable
+(``repro.fleet.jax_backend``): the routing argmin (watt-table marginal
+cost over active masks, ties by load then name rank) and the Erlang-C
+queue-depth sweep behind the planner's k-search.  numpy stays the
+bit-exact reference; the contract here is that the jax routing winner
+is *identical* on every input (the tie-break is discrete) and the jax
+queue depths land within reduction-reorder distance of the numpy sweep.
+The planner itself must make identical gate/wake decisions on either
+backend, and degrade to numpy with a warning when jax is missing.
+"""
+import numpy as np
+import pytest
+
+from fleet_sim import sim_envelope_node
+from repro.fleet import (ArrivalForecaster, FleetPolicy,
+                         FleetPowerPlanner, FleetScheduler,
+                         PowerPlanPolicy, PowerStatePolicy)
+from repro.fleet.jax_backend import HAVE_JAX, route_argmin_np
+from repro.serve.engine import Request
+
+needs_jax = pytest.mark.skipif(not HAVE_JAX, reason="needs jax")
+
+
+# -- the numpy routing reference ----------------------------------------
+
+def test_route_argmin_np_tie_break_order():
+    marg = np.array([3.0, 1.0, 1.0, 1.0])
+    load = np.array([0.0, 0.5, 0.25, 0.25])
+    rank = np.array([0, 1, 2, 3])
+    active = np.ones(4, bool)
+    # marginal ties 1/2/3, load ties 2/3, rank picks 2
+    assert route_argmin_np(marg, load, rank, active) == 2
+    # masking the winner promotes the next in tie order
+    active[2] = False
+    assert route_argmin_np(marg, load, rank, active) == 3
+    assert route_argmin_np(marg, load, rank,
+                           np.zeros(4, bool)) == -1
+    # inf marginals still route when they are all that's active
+    assert route_argmin_np(np.full(2, np.inf), load[:2], rank[:2],
+                           np.ones(2, bool)) == 0
+
+
+# -- the jit twins -------------------------------------------------------
+
+@needs_jax
+def test_route_argmin_jax_matches_np_exactly():
+    from repro.fleet.jax_backend import route_argmin_jax
+    rng = np.random.default_rng(7)
+    for trial in range(60):
+        n = int(rng.integers(1, 33))
+        # quantized marginals + quantized loads force real tie sets
+        marg = rng.integers(0, 4, n) * 0.125
+        marg[rng.random(n) < 0.15] = np.inf
+        load = rng.integers(0, 3, n) / 2.0
+        rank = rng.permutation(n).astype(np.int64)
+        active = rng.random(n) < (0.7 if trial % 3 else 0.05)
+        want = route_argmin_np(marg, load, rank, active)
+        got = route_argmin_jax(marg, load, rank, active)
+        assert got == want, (trial, marg, load, rank, active)
+
+
+@needs_jax
+def test_lq_sweep_jax_matches_numpy_sweep():
+    from repro.fleet.jax_backend import expected_queue_depth_many_jax
+    fc = ArrivalForecaster()
+    for t in np.linspace(0.0, 3.0, 40):
+        fc.observe(float(t))
+    lam = fc.rate(now=3.0)
+    servers = np.arange(1, 65, dtype=np.int64)
+    for service_time in (0.01, 0.2, 2.0, 50.0):
+        ref = fc.expected_queue_depth_many(servers, service_time,
+                                           now=3.0, horizon=64.0)
+        got = expected_queue_depth_many_jax(servers, service_time, lam,
+                                            horizon=64.0)
+        np.testing.assert_allclose(got, ref, rtol=1e-9, atol=1e-12)
+    assert expected_queue_depth_many_jax(
+        np.zeros(0, np.int64), 0.2, lam).size == 0
+
+
+# -- the planner on either backend --------------------------------------
+
+def _planner_script():
+    dues = list(range(1, 9)) + list(range(120, 150, 3))
+    return [(due, Request(rid=rid, prompt=np.full(3, 2, np.int32),
+                          max_new=4, tenant=f"team{rid % 2}"))
+            for rid, due in enumerate(dues)]
+
+
+def _run_planned(backend: str):
+    ppol = PowerPlanPolicy(
+        mode="gate", slo_queue_depth=2.0, plan_every=4, min_active=1,
+        min_active_steps=8, horizon_steps=32.0,
+        states=PowerStatePolicy(gate_watts=3.0, boot_energy_ws=2.0,
+                                warmup_steps=4, cooldown_steps=8))
+    nodes = [sim_envelope_node(f"n{i}", slots=2, step_s=0.01)
+             for i in range(4)]
+    planner = FleetPowerPlanner(policy=ppol, backend=backend)
+    sched = FleetScheduler(
+        nodes,
+        policy=FleetPolicy(flush_every=4, checkpoint_every=8,
+                           migrate_on_drift=False),
+        planner=planner)
+    fin = sched.run(arrivals=_planner_script(), max_steps=2000)
+    return sched, fin
+
+
+@needs_jax
+def test_planner_backends_make_identical_decisions():
+    ref, fin_ref = _run_planned("numpy")
+    jx, fin_jx = _run_planned("jax")
+    assert jx.planner.backend == "jax"
+    assert any(e.action == "gate" for e in ref.planner.events)
+    assert sorted(r.rid for r in fin_jx) == \
+        sorted(r.rid for r in fin_ref)
+    assert [(e.step, e.node, e.action, tuple(e.moved_rids))
+            for e in jx.planner.events] == \
+        [(e.step, e.node, e.action, tuple(e.moved_rids))
+         for e in ref.planner.events]
+    assert jx.ledger.total_ws == ref.ledger.total_ws
+
+
+def test_planner_rejects_unknown_backend():
+    with pytest.raises(ValueError, match="backend"):
+        FleetPowerPlanner(policy=PowerPlanPolicy(), backend="cuda")
+
+
+def test_planner_summary_records_effective_backend():
+    sched, _ = _run_planned("numpy")
+    doc = sched.planner.summary()
+    assert doc["backend_requested"] == "numpy"
+    assert doc["backend_effective"] == "numpy"

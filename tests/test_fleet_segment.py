@@ -182,6 +182,47 @@ def test_segment_rejects_unknown_backend():
         _make(SegmentFleet, backend="cuda")
 
 
+def test_jax_request_degrades_to_numpy_when_jax_missing(monkeypatch):
+    """A ``backend="jax"`` request on a box without jax must warn, fall
+    back to the numpy booking plane, and serve the exact same run —
+    identical events, finished set, and ledger — as an explicit numpy
+    engine.  The summary records both what was asked and what ran."""
+    import repro.fleet.segment as segment_mod
+    monkeypatch.setattr(segment_mod, "HAVE_JAX", False)
+    with pytest.warns(RuntimeWarning, match="jax is not importable"):
+        seg = _make(SegmentFleet, backend="jax")
+    assert seg.backend_requested == "jax"
+    assert seg.backend == "numpy"
+    fin_seg = seg.run(_script(), max_steps=400)
+    ref = _make(SegmentFleet, backend="numpy")
+    fin_ref = ref.run(_script(), max_steps=400)
+    _assert_twin(ref, seg, fin_ref, fin_seg, rtol=0.0)
+    doc = seg.summary()
+    assert doc["engine"] == "vector-seg"       # what actually ran
+    assert doc["backend_effective"] == "numpy"
+    assert doc["backend_requested"] == "jax"
+
+
+def test_planner_jax_request_degrades_to_numpy(monkeypatch):
+    """Same degradation contract for the planner's k-search backend:
+    warn, fall back, keep the numpy sweep's exact decisions."""
+    import repro.fleet.jax_backend as jb
+    from repro.fleet import FleetPowerPlanner
+    monkeypatch.setattr(jb, "HAVE_JAX", False)
+    ppol = PowerPlanPolicy(
+        mode="gate", slo_queue_depth=4.0, plan_every=4, min_active=1,
+        min_active_steps=20, horizon_steps=32.0,
+        states=PowerStatePolicy(gate_watts=3.0, boot_energy_ws=2.0,
+                                warmup_steps=4, cooldown_steps=8))
+    with pytest.warns(RuntimeWarning, match="FleetPowerPlanner"):
+        planner = FleetPowerPlanner(policy=ppol, backend="jax")
+    assert planner.backend_requested == "jax"
+    assert planner.backend == "numpy"
+    doc = planner.summary()
+    assert doc["backend_requested"] == "jax"
+    assert doc["backend_effective"] == "numpy"
+
+
 def test_cli_selects_segment_engine(monkeypatch, capsys):
     from repro.launch import serve
     monkeypatch.setattr("sys.argv", [

@@ -1,0 +1,184 @@
+"""The sharded segment fleet engine vs the segment reference.
+
+The contract (docs/fleet_scale.md): ``ShardedSegmentFleet`` partitions
+the node array into strided shards and routes through a two-level
+argmin — per-shard local winner, then a cross-shard reduce — but the
+tie-break order (marginal Ws/token, then load, then name rank) is a
+total order whose tie sets decompose over any partition, so placement
+events, finished requests, and every ledger cell must be *bit-identical*
+to ``SegmentFleet`` at every shard count, in both booking modes
+(``inline`` partials and forked workers over shared memory).
+"""
+import numpy as np
+import pytest
+
+from repro.core.power import R740_ARRIA10
+from repro.fleet import (AdmissionController, FleetPolicy,
+                         PowerPlanPolicy, PowerStatePolicy, SegmentFleet,
+                         ShardedSegmentFleet, VectorArrivals,
+                         VectorNodeSpec)
+from repro.serve.engine import Request
+from repro.telemetry import WsBudget, node_envelope
+
+TICK = 0.004
+
+
+def _req(rid, max_new=6, tenant="default", plen=5):
+    return Request(rid=rid, prompt=np.full(plen, 2, np.int32),
+                   max_new=max_new, tenant=tenant)
+
+
+def _script():
+    """Bursts around a trough with a dense re-admission tail — gates,
+    boot + canary wakes, and admission throttling all on the path."""
+    dues = (list(range(1, 7)) + list(range(120, 138, 3))
+            + [200 + k // 3 for k in range(18)])
+    return [(due, _req(rid, max_new=3 + rid % 4, tenant=f"team{rid % 2}"))
+            for rid, due in enumerate(dues)]
+
+
+def _make(cls, n_nodes=5, slots=2, heterogeneous=False, admitted=True,
+          **kw):
+    policy = FleetPolicy(flush_every=4, checkpoint_every=8,
+                         router="energy", migrate_on_drift=False)
+    ppol = PowerPlanPolicy(
+        mode="gate", slo_queue_depth=4.0, plan_every=4, min_active=1,
+        min_active_steps=20, horizon_steps=32.0,
+        states=PowerStatePolicy(gate_watts=3.0, boot_energy_ws=2.0,
+                                warmup_steps=4, cooldown_steps=8))
+    env = node_envelope(R740_ARRIA10)
+    specs = [VectorNodeSpec(f"n{i}", env,
+                            slots=(1 + i % 3) if heterogeneous else slots,
+                            step_s=TICK)
+             for i in range(n_nodes)]
+    adm = AdmissionController(
+        {"team0": WsBudget(budget_ws=12.0, window_steps=0)}) \
+        if admitted else None
+    return cls(specs, policy=policy, plan=ppol, admission=adm,
+               loop_model="serve", **kw)
+
+
+def _assert_bitwise_twin(ref, shd, fin_ref, fin_shd):
+    assert fin_shd == fin_ref
+    assert shd.steps == ref.steps
+    assert [(e.step, e.node, e.action, tuple(e.moved_rids))
+            for e in shd.events] == \
+        [(e.step, e.node, e.action, tuple(e.moved_rids))
+         for e in ref.events]
+    a, b = ref.ledger, shd.ledger
+    assert a.total_ws == b.total_ws
+    assert set(a.cells) == set(b.cells)
+    for key, ca in a.cells.items():
+        cb = b.cells[key]
+        assert (ca.ws, ca.seconds, ca.count, ca.peak_w) == \
+            (cb.ws, cb.seconds, cb.count, cb.peak_w), key
+
+
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_placement_script_bitwise_equivalence(shards):
+    """The full control surface — energy routing, admission throttles,
+    trough gates, burst wakes — joule-for-joule at each shard count."""
+    ref = _make(SegmentFleet)
+    fin_ref = ref.run(_script(), max_steps=400)
+    shd = _make(ShardedSegmentFleet, shards=shards, parallel="inline")
+    fin_shd = shd.run(_script(), max_steps=400)
+    assert any(e.action == "gate" for e in ref.events)
+    assert any(e.action == "wake" for e in ref.events)
+    _assert_bitwise_twin(ref, shd, fin_ref, fin_shd)
+
+
+@pytest.mark.parametrize("shards", [2, 3])
+def test_heterogeneous_slots_take_the_float_tie_path(shards):
+    """Mixed slot counts disable the int64 composite tie key — the
+    float load column must reproduce the same winners."""
+    ref = _make(SegmentFleet, heterogeneous=True)
+    fin_ref = ref.run(_script(), max_steps=400)
+    shd = _make(ShardedSegmentFleet, heterogeneous=True, shards=shards,
+                parallel="inline")
+    assert shd._lk is None      # the uniform-key fast path is off
+    fin_shd = shd.run(_script(), max_steps=400)
+    _assert_bitwise_twin(ref, shd, fin_ref, fin_shd)
+
+
+def test_more_shards_than_nodes_clamps():
+    shd = _make(ShardedSegmentFleet, n_nodes=3, shards=8,
+                parallel="inline")
+    assert shd._shards == 3
+    ref = _make(SegmentFleet, n_nodes=3)
+    fin_ref = ref.run(_script(), max_steps=400)
+    fin_shd = shd.run(_script(), max_steps=400)
+    _assert_bitwise_twin(ref, shd, fin_ref, fin_shd)
+
+
+def test_process_mode_matches_inline_bitwise():
+    """Forked shared-memory booking folds the same records in the same
+    order as inline partials — identical down to the last bit."""
+    a = _make(ShardedSegmentFleet, shards=2, parallel="inline")
+    fin_a = a.run(_script(), max_steps=400)
+    b = _make(ShardedSegmentFleet, shards=2, parallel="process")
+    fin_b = b.run(_script(), max_steps=400)
+    _assert_bitwise_twin(a, b, fin_a, fin_b)
+
+
+def test_diurnal_stream_equivalence_at_scale():
+    """A denser seeded diurnal stream over a wider fleet: segment
+    boundaries, planner windows, and ring growth all land mid-run."""
+    arr = VectorArrivals.diurnal(4000, tenants=3, hours=24,
+                                 steps_per_hour=40, max_new=6, seed=5)
+    ref = _make(SegmentFleet, n_nodes=16, admitted=False)
+    fin_ref = ref.run(arr, max_steps=3000)
+    for shards in (2, 4):
+        shd = _make(ShardedSegmentFleet, n_nodes=16, admitted=False,
+                    shards=shards, parallel="inline")
+        fin_shd = shd.run(arr, max_steps=3000)
+        _assert_bitwise_twin(ref, shd, fin_ref, fin_shd)
+
+
+def test_shared_memory_lifecycle_cleanup(monkeypatch):
+    """Worker processes and shared-memory segments are torn down by the
+    finalize barrier — nothing leaks into /dev/shm after a run."""
+    shd = _make(ShardedSegmentFleet, shards=2, parallel="process")
+    captured = []
+    orig = ShardedSegmentFleet._make_accumulator
+
+    def spy(self):
+        acc = orig(self)
+        captured.append(acc)
+        return acc
+
+    monkeypatch.setattr(ShardedSegmentFleet, "_make_accumulator", spy)
+    shd.run(_script(), max_steps=400)
+    (acc,) = captured
+    assert acc._closed
+    assert acc._shms == [] and acc._parts == []
+    assert all(not p.is_alive() for p in acc._procs)
+    acc.close()                         # idempotent
+
+
+def test_constructor_validation():
+    with pytest.raises(ValueError, match="shards"):
+        _make(ShardedSegmentFleet, shards=0)
+    with pytest.raises(ValueError, match="parallel"):
+        _make(ShardedSegmentFleet, parallel="threads")
+
+
+def test_summary_reports_shard_surface():
+    shd = _make(ShardedSegmentFleet, shards=2, parallel="inline")
+    shd.run(_script(), max_steps=400)
+    doc = shd.summary()
+    assert doc["engine"] == "vector-shard"
+    assert doc["shards"] == 2
+    assert doc["parallel"] == "inline"
+    assert doc["dispatch_s"] >= doc["route_s"] >= 0.0
+
+
+def test_cli_selects_shard_engine(monkeypatch, capsys):
+    from repro.launch import serve
+    monkeypatch.setattr("sys.argv", [
+        "serve", "--engine", "vector-shard", "--fleet", "4", "--slots",
+        "2", "--requests", "6", "--max-new", "4", "--placement", "gate",
+        "--shard-workers", "2", "--shard-parallel", "inline"])
+    serve.main()
+    out = capsys.readouterr().out
+    assert "engine=vector-shard" in out
+    assert "served 6 requests" in out

@@ -18,7 +18,7 @@ from hypothesis import given, settings, strategies as st
 from fleet_sim import sim_envelope_node
 from repro.fleet import (FleetPolicy, FleetPowerPlanner, FleetScheduler,
                          PowerPlanPolicy, PowerStatePolicy, SegmentFleet,
-                         VectorFleet, VectorNodeSpec)
+                         ShardedSegmentFleet, VectorFleet, VectorNodeSpec)
 from repro.fleet.jax_backend import HAVE_JAX
 from repro.core.power import V5E
 from repro.serve.engine import Request
@@ -196,3 +196,38 @@ def test_jax_backend_agrees_with_stepped(raw, n_nodes):
                                               "jax")
     _assert_engines_agree(ref, fin_ref, seg, fin_seg)
     _assert_conserves(seg.ledger)
+
+
+@settings(max_examples=15, deadline=None)
+@given(raw=_DIURNAL_RAW,
+       n_nodes=st.integers(min_value=2, max_value=4),
+       loop_model=st.sampled_from(["serve", "sim"]),
+       shards=st.sampled_from([1, 2, 4]))
+def test_sharded_engine_agrees_with_segment(raw, n_nodes, loop_model,
+                                            shards):
+    """The sharded engine's two-level argmin must reproduce the segment
+    engine's ledger and placement events bit for bit at every worker
+    count — shard boundaries cut through tie sets on these scripts
+    (more shards than nodes is also legal: empty shards stay inert)."""
+    _, _, seg, fin_seg = _run_engines(raw, n_nodes, 2, loop_model,
+                                      "numpy")
+    script = [(due, Request(rid=rid, prompt=np.full(3, 2, np.int32),
+                            max_new=max_new, tenant=f"team{tenant}"))
+              for rid, (due, tenant, max_new)
+              in enumerate(_build_diurnal_script(raw))]
+    policy = FleetPolicy(flush_every=4, checkpoint_every=8,
+                         router="energy", migrate_on_drift=False)
+    ppol = PowerPlanPolicy(
+        mode="gate", slo_queue_depth=2.0, plan_every=4, min_active=1,
+        min_active_steps=8, horizon_steps=32.0,
+        states=PowerStatePolicy(gate_watts=3.0, boot_energy_ws=2.0,
+                                warmup_steps=4, cooldown_steps=8))
+    env = envelope_for(V5E)
+    specs = [VectorNodeSpec(f"n{i}", env, slots=2, step_s=TICK)
+             for i in range(n_nodes)]
+    shd = ShardedSegmentFleet(specs, policy=policy, plan=ppol,
+                              loop_model=loop_model, shards=shards,
+                              parallel="inline")
+    fin_shd = shd.run(script, max_steps=3000)
+    _assert_engines_agree(seg, fin_seg, shd, fin_shd, rtol=0.0)
+    _assert_conserves(shd.ledger)
