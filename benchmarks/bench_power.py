@@ -101,6 +101,7 @@ report (the CI workflow uploads it as an artifact).
 """
 from __future__ import annotations
 
+import json
 import os
 import time
 from pathlib import Path
@@ -108,6 +109,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs import get_config
 from repro.core.backends import ReplayBackend
 from repro.core.power import R740_ARRIA10
@@ -664,6 +666,49 @@ def _fleet_diurnal_1m():
                              f"{r['powered_nodes']}, "
                              f"{r['gates']}/{r['wakes']}"
                              for r in curve))
+    # flight-recorder A/B on the same rung: a second run with the
+    # recorder fully armed (sampled request trees + time-series
+    # snapshots + the always-on self-profiler) against the plain run
+    # above.  The <= 1.10x overhead budget docs/observability.md
+    # promises is measured here, and the ledger must stay bit-identical
+    # (snapshots land on event boundaries, sampling only thins traces).
+    sample = float(os.environ.get("REPRO_BENCH_FLEET_1M_SAMPLE", "1e-4"))
+    snap_every = int(os.environ.get("REPRO_BENCH_FLEET_1M_SNAPSHOT",
+                                    str(steps_per_hour)))
+    obs.disable()
+    if sample < 1.0:
+        obs.set_tracer(obs.Tracer())
+    fl = obs.FlightRecorder(sample_rate=sample, snapshot_every=snap_every)
+    obs.set_flight(fl)
+    try:
+        vec_fl = _scale_fleet("vector-seg", n_nodes)
+        t0 = time.perf_counter()
+        vec_fl.run(arrivals, max_steps=80_000)
+        wall_on = time.perf_counter() - t0
+        sa = obs.attribute_joules_sampled(
+            list(obs.TRACER.spans), vec_fl.ledger, sample,
+            population=fl.population)
+        fl.write_jsonl("fleet-flight-1m.jsonl")
+    finally:
+        obs.disable()
+    doc["flight"] = {
+        "sample_rate": sample, "snapshot_every": snap_every,
+        "wall_seconds_on": wall_on,
+        "overhead_ratio": wall_on / max(wall, 1e-9),
+        "snapshots": len(fl.snapshots),
+        "sampled_spans": fl.sampled_spans,
+        "bit_identical": vec_fl.total_ws == vec.total_ws,
+        "profile": vec_fl.summary().get("profile"),
+        "conservation": sa.to_dict(),
+        "log": "fleet-flight-1m.jsonl"}
+    lines.append(
+        f"fleet_diurnal_1m flight recorder: {wall_on:.2f}s wall with "
+        f"sampling {sample:g} + snapshots every {snap_every} steps "
+        f"({doc['flight']['overhead_ratio']:.3f}x the plain run, "
+        f"{doc['flight']['snapshots']} snapshot rows, "
+        f"{doc['flight']['sampled_spans']} sampled spans, ledger "
+        f"{'bit-identical' if doc['flight']['bit_identical'] else 'DIVERGED'}, "
+        f"scale-up {'ok' if sa.ok else 'OUT OF BOUND'})")
     return lines, doc
 
 
@@ -724,12 +769,34 @@ def _fleet_diurnal_10m():
     verify_arrivals = int(os.environ.get(
         "REPRO_BENCH_FLEET_10M_VERIFY", str(max(n_arrivals // 50, 1))))
     arrivals = _shard_rung_arrivals(n_arrivals)
+    # the flight recorder rides every timed arm (same burden on each,
+    # so the shard-scaling curve stays an apples-to-apples sweep):
+    # sampled request trees at REPRO_BENCH_FLEET_10M_SAMPLE, snapshot
+    # rows once per simulated hour by default, self-profiler always on
+    sample = float(os.environ.get("REPRO_BENCH_FLEET_10M_SAMPLE", "1e-3"))
+    sph = max(int(round(n_arrivals / (2400.0 * 24))), 1)
+    snap_every = int(os.environ.get("REPRO_BENCH_FLEET_10M_SNAPSHOT",
+                                    str(sph)))
     lines, curve = [], []
+    last_fl = None
     for w in shard_counts:
         vec = _shard_rung_fleet("vector-shard", n_nodes, shards=w)
-        t0 = time.perf_counter()
-        finished = vec.run(arrivals, max_steps=10_000_000)
-        wall = time.perf_counter() - t0
+        obs.disable()
+        if sample < 1.0:
+            obs.set_tracer(obs.Tracer())
+        fl = obs.FlightRecorder(sample_rate=sample,
+                                snapshot_every=snap_every)
+        obs.set_flight(fl)
+        try:
+            t0 = time.perf_counter()
+            finished = vec.run(arrivals, max_steps=10_000_000)
+            wall = time.perf_counter() - t0
+            sa = obs.attribute_joules_sampled(
+                list(obs.TRACER.spans), vec.ledger, sample,
+                population=fl.population)
+        finally:
+            obs.disable()
+        last_fl = fl
         summ = vec.summary()
         arm = {"shards": w, "parallel": summ.get("parallel"),
                "wall_seconds": wall,
@@ -738,14 +805,22 @@ def _fleet_diurnal_10m():
                "arrivals_per_sec": n_arrivals / max(wall, 1e-9),
                "finished": len(finished), "steps": vec.steps,
                "total_ws": vec.total_ws,
-               "placement_events": len(vec.events)}
+               "placement_events": len(vec.events),
+               "profile": summ.get("profile"),
+               "flight": {"sample_rate": sample,
+                          "snapshot_every": snap_every,
+                          "snapshots": len(fl.snapshots),
+                          "sampled_spans": fl.sampled_spans,
+                          "scaleup": sa.to_dict()}}
         curve.append(arm)
         lines.append(
             f"fleet_diurnal_10m[shards={w}]: {n_arrivals} arrivals "
             f"over {n_nodes} nodes in {wall:.2f}s wall "
             f"(dispatch {arm['dispatch_seconds']:.2f}s, route "
             f"{arm['route_seconds']:.2f}s, "
-            f"{arm['arrivals_per_sec']:,.0f} arrivals/sec)")
+            f"{arm['arrivals_per_sec']:,.0f} arrivals/sec, "
+            f"{arm['flight']['sampled_spans']} sampled spans, "
+            f"scale-up {'ok' if sa.ok else 'OUT OF BOUND'})")
     base = curve[0]
     for arm in curve:
         for field_, out in (("wall_seconds", "wall_speedup_vs_1"),
@@ -794,13 +869,31 @@ def _fleet_diurnal_10m():
         "route_speedup_vs_1": lead["route_speedup_vs_1"],
         "best_route_speedup": best["route_speedup_vs_1"],
         "best_route_speedup_shards": best["shards"]})
+    # persist the per-arm self-profiler counters (scripts/perf_gate.py
+    # reads them for the measured Amdahl dispatch floor, and
+    # scripts/trace_report.py --profile renders them) plus the widest
+    # arm's snapshot time series, next to BENCH_fleet.json in cwd
+    Path("fleet-profile-phases.json").write_text(json.dumps(
+        {"workload": "fleet_diurnal_10m", "nodes": n_nodes,
+         "arrivals": n_arrivals,
+         "arms": [{"shards": a["shards"], "profile": a["profile"]}
+                  for a in curve]}, indent=2))
+    if last_fl is not None:
+        last_fl.write_jsonl("fleet-flight-10m.jsonl")
+        lines.append(
+            f"fleet_diurnal_10m flight: sample rate {sample:g}, "
+            f"{len(last_fl.snapshots)} snapshots every {snap_every} "
+            f"steps -> fleet-flight-10m.jsonl; per-arm profiles -> "
+            f"fleet-profile-phases.json")
     doc = {"workload": "fleet_diurnal_10m", "engine": "vector-shard",
            "nodes": n_nodes, "arrivals": n_arrivals,
            "shard_counts": shard_counts, "curve": curve,
            "best_route_speedup": best["route_speedup_vs_1"],
            "best_route_speedup_shards": best["shards"],
            "verify_arrivals": verify_arrivals,
-           "equivalence": equivalence}
+           "equivalence": equivalence,
+           "flight_log": "fleet-flight-10m.jsonl",
+           "profile_export": "fleet-profile-phases.json"}
     for key in ("finished", "steps", "wall_seconds", "dispatch_seconds",
                 "route_seconds", "arrivals_per_sec", "total_ws",
                 "placement_events"):

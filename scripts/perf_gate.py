@@ -23,6 +23,13 @@ auto-detected):
   over 1); a config-matched fresh run is then compared against the
   baseline's best route speedup with the same warn/fail bands.
 
+A third pass reads the engine self-profiler counters each fresh curve
+arm carries (``profile.phases``, falling back to the flat
+``dispatch_s``/``route_s``) and reports the *measured* Amdahl dispatch
+floor — the non-route seconds sharding cannot shrink — failing only
+when the counters are inconsistent (route exceeding its containing
+dispatch wall).
+
 Workloads named in ``--require`` (default: both gates) must be present
 in the fresh report — a missing row is a hard FAIL with the workload
 named, not an IndexError three expressions later.  The ratio gates are
@@ -82,6 +89,58 @@ def present_workloads(doc: dict) -> set:
     found.update(r.get("workload") for r in rows if r.get("workload"))
     found.update((doc.get("metrics") or {}).keys())
     return found
+
+
+def arm_phase_seconds(arm: dict) -> tuple:
+    """(dispatch_s, route_s, source) for one curve arm — preferring the
+    engine self-profiler's per-phase counters
+    (``summary()["profile"]["phases"]``) over the flat fields the
+    pre-profiler rung docs carried."""
+    phases = ((arm.get("profile") or {}).get("phases")) or {}
+    d = (phases.get("dispatch") or {}).get("seconds")
+    r = (phases.get("route") or {}).get("seconds")
+    if d is not None and r is not None:
+        return d, r, "profile"
+    return arm.get("dispatch_s"), arm.get("route_s"), "flat"
+
+
+def gate_profile(fresh_doc: dict) -> int:
+    """The measured Amdahl dispatch floor (docs/fleet_scale.md): per
+    arm, the non-route share of the dispatch wall (dispatch - route)
+    is the part more shards cannot shrink.  This gate *reports* the
+    measured floor per shard count and FAILs only on inconsistent
+    counters — route wall-clock exceeding the dispatch wall that
+    contains it means the profiler (or the doc) is lying."""
+    fresh = rung_doc(fresh_doc)
+    if not fresh:
+        return 0
+    rows = []
+    for arm in fresh.get("curve") or []:
+        d, r, src = arm_phase_seconds(arm)
+        if d is None or r is None:
+            continue
+        rows.append((arm.get("shards"), float(d), float(r), src))
+    if not rows:
+        print("perf-gate: SKIP — fleet_diurnal_10m arms carry no "
+              "dispatch/route counters; the measured Amdahl floor "
+              "needs the engine self-profiler")
+        return 0
+    rc = 0
+    for shards, d, r, src in rows:
+        if r > d * 1.05 + 1e-3:
+            print(f"perf-gate: FAIL — fleet_diurnal_10m [{src}] at "
+                  f"{shards} shards: route {r:.3f}s exceeds its "
+                  f"containing dispatch wall {d:.3f}s — profiler "
+                  f"counters are inconsistent")
+            rc = 1
+            continue
+        floor = max(d - r, 0.0)
+        share = 100.0 * floor / d if d > 0 else 0.0
+        print(f"perf-gate: OK — fleet_diurnal_10m [{src}] measured "
+              f"dispatch floor at {shards} shards: {floor:.3f}s of "
+              f"{d:.3f}s ({share:.0f}% non-route — the Amdahl floor "
+              f"more shards cannot shrink)")
+    return rc
 
 
 def route_speedup_at(doc: dict, shards: int) -> float | None:
@@ -228,6 +287,7 @@ def main() -> int:
                             args.fail_below))
     rc = max(rc, gate_rung(base_doc, fresh_doc, args.warn_below,
                            args.fail_below, args.min_route_speedup))
+    rc = max(rc, gate_profile(fresh_doc))
     return rc
 
 

@@ -3,6 +3,8 @@
     PYTHONPATH=src python scripts/trace_report.py --trace spans.json
     PYTHONPATH=src python scripts/trace_report.py --trace spans.jsonl \
         [--metrics metrics.prom] [--slowest 10] [--json]
+    PYTHONPATH=src python scripts/trace_report.py --flight flight.jsonl \
+        [--steps-per-hour 3600] [--profile fleet-profile-phases.json]
 
 ``--trace`` accepts either export the serving CLI writes (``--trace-spans``
 of ``repro.launch.serve``): the Chrome ``trace_event`` JSON or the raw
@@ -14,10 +16,18 @@ spans JSONL sidecar — the format is auto-detected.  The text report shows
   * a per-phase attributed-Ws treemap (text bars), which is where
     synthesized ``unattributed:*`` spans show up as visible debt.
 
-``--metrics`` additionally echoes the quantile lines of a Prometheus
-text export (the serving CLI's ``--metrics-out``).  Imports only
-``repro.obs`` — no jax — so it runs on a machine that just holds the
-logs.  Exits non-zero on a missing, empty, or span-less input.
+``--flight`` renders a flight-recorder snapshot log (the serving CLI's
+``--flight-log`` / the bench rungs' ``fleet-flight-*.jsonl``) as a
+per-simulated-hour time series: mean aggregate watts (with text bars),
+active nodes, peak queue depth, and arrivals.  A missing, empty, or
+truncated flight log renders whatever made it to disk and exits 0 — a
+killed run's log must still be inspectable.  ``--profile`` renders the
+engine self-profiler table (``summary()["profile"]`` docs, or the bench
+export's per-arm list).  ``--metrics`` additionally echoes the quantile
+lines of a Prometheus text export (the serving CLI's ``--metrics-out``).
+Imports only ``repro.obs`` — no jax — so it runs on a machine that just
+holds the logs.  Exits non-zero on a missing, empty, or span-less
+``--trace`` input.
 """
 import argparse
 import json
@@ -26,7 +36,8 @@ from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
-from repro.obs import read_chrome_trace, read_spans_jsonl  # noqa: E402
+from repro.obs import (read_chrome_trace, read_flight_jsonl,  # noqa: E402
+                       read_spans_jsonl)
 
 BAR_WIDTH = 40
 
@@ -92,6 +103,93 @@ def render(summary: dict, spans: list, slowest: int) -> list:
     return lines
 
 
+def render_flight(rows: list, steps_per_hour: int) -> list:
+    """Per-simulated-hour table over flight-log snapshot rows.
+
+    Rows missing a ``t`` field (foreign JSON that slipped into the log)
+    are skipped; an empty log renders a one-line notice — never a
+    traceback — so a truncated log from a killed run stays inspectable.
+    """
+    rows = [r for r in rows if isinstance(r.get("t"), (int, float))]
+    if not rows:
+        return ["-- flight log: no snapshot rows --"]
+    sph = max(int(steps_per_hour), 1)
+    hours: dict = {}
+    for r in rows:
+        h = hours.setdefault(int(r["t"]) // sph, {
+            "n": 0, "watts": 0.0, "active": 0, "queue": 0,
+            "arrivals": 0, "ws": 0.0})
+        h["n"] += 1
+        h["watts"] += float(r.get("aggregate_watts", 0.0))
+        h["active"] = max(h["active"], int(r.get("active_nodes", 0)))
+        h["queue"] = max(h["queue"], int(r.get("queue_depth", 0)))
+        h["arrivals"] += int(r.get("arrivals_in_window", 0))
+        h["ws"] = max(h["ws"], float(r.get("cumulative_ws", 0.0)))
+    peak = max(h["watts"] / h["n"] for h in hours.values())
+    lines = [f"== flight log: {len(rows)} snapshots over "
+             f"{len(hours)} simulated hours "
+             f"({sph} steps/hour) ==",
+             f"{'hour':>5}{'rows':>6}{'mean_W':>10}{'active':>8}"
+             f"{'max_q':>7}{'arrivals':>10}{'cum_Ws':>12}"]
+    for hr in sorted(hours):
+        h = hours[hr]
+        mean_w = h["watts"] / h["n"]
+        bar = "#" * (max(int(round(BAR_WIDTH * mean_w / peak)), 1)
+                     if peak > 0 and mean_w > 0 else 0)
+        lines.append(f"{hr:>5}{h['n']:>6}{mean_w:>10.1f}"
+                     f"{h['active']:>8}{h['queue']:>7}"
+                     f"{h['arrivals']:>10}{h['ws']:>12.1f} {bar}")
+    return lines
+
+
+def _profile_arms(doc) -> list:
+    """Normalize a profiler export to ``[(label, phases-dict), ...]``.
+
+    Accepts a bare ``{"phases": ...}`` profile, an engine ``summary()``
+    doc carrying one under ``"profile"``, the bench export's
+    ``{"arms": [...]}`` shape, or a plain list of arm docs."""
+    if isinstance(doc, list):
+        arms = doc
+    elif isinstance(doc, dict) and isinstance(doc.get("arms"), list):
+        arms = doc["arms"]
+    else:
+        arms = [doc]
+    out = []
+    for i, arm in enumerate(arms):
+        if not isinstance(arm, dict):
+            continue
+        prof = arm.get("profile", arm)
+        phases = (prof or {}).get("phases")
+        if not isinstance(phases, dict) or not phases:
+            continue
+        label = arm.get("label") or (
+            f"shards={arm['shards']}" if "shards" in arm
+            else arm.get("engine") or f"arm{i}")
+        out.append((str(label), phases))
+    return out
+
+
+def render_profile(doc) -> list:
+    arms = _profile_arms(doc)
+    if not arms:
+        return ["-- profiler: no phase counters --"]
+    lines = []
+    for label, phases in arms:
+        total = sum(float(row.get("seconds", 0.0))
+                    for row in phases.values())
+        lines.append(f"== engine profile [{label}]: "
+                     f"{total:.4f}s across {len(phases)} phases ==")
+        lines.append(f"{'phase':<16}{'seconds':>10}{'count':>10}"
+                     f"{'share':>8}")
+        for p, row in sorted(phases.items(),
+                             key=lambda kv: -kv[1].get("seconds", 0.0)):
+            s = float(row.get("seconds", 0.0))
+            share = 100.0 * s / total if total > 0 else 0.0
+            lines.append(f"{p:<16}{s:>10.4f}{row.get('count', 0):>10}"
+                         f"{share:>7.1f}%")
+    return lines
+
+
 def render_metrics(path: Path) -> list:
     """Echo the quantile summary lines of a Prometheus text export."""
     lines = [f"-- metrics quantiles ({path.name}) --"]
@@ -103,36 +201,67 @@ def render_metrics(path: Path) -> list:
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--trace", required=True,
+    ap.add_argument("--trace", default=None,
                     help="Chrome trace JSON or spans JSONL to render")
     ap.add_argument("--metrics", default=None,
                     help="Prometheus text export to echo quantiles from")
+    ap.add_argument("--flight", default=None,
+                    help="flight-recorder snapshot JSONL to render as a "
+                         "per-simulated-hour time series (a missing or "
+                         "truncated log renders what exists, exit 0)")
+    ap.add_argument("--steps-per-hour", type=int, default=3600,
+                    help="fleet steps per simulated hour for the "
+                         "--flight bucketing")
+    ap.add_argument("--profile", default=None,
+                    help="engine self-profiler JSON (summary()['profile'] "
+                         "or the bench per-arm export) to render")
     ap.add_argument("--slowest", type=int, default=8,
                     help="how many slowest spans to list")
     ap.add_argument("--json", action="store_true",
                     help="emit the summary as JSON instead of text")
     args = ap.parse_args()
 
-    path = Path(args.trace)
-    if not path.is_file():
-        sys.exit(f"no such file: {path}")
-    if path.stat().st_size == 0:
-        sys.exit(f"empty file: {path}")
-    spans = load_trace(path)
-    if not spans:
-        sys.exit(f"no spans in {path}")
+    if not (args.trace or args.flight or args.profile):
+        ap.error("nothing to render — pass --trace, --flight, or "
+                 "--profile")
 
-    summary = summarize(spans)
-    if args.json:
-        print(json.dumps(summary, indent=2, sort_keys=True))
-    else:
-        for line in render(summary, spans, args.slowest):
+    if args.trace:
+        path = Path(args.trace)
+        if not path.is_file():
+            sys.exit(f"no such file: {path}")
+        if path.stat().st_size == 0:
+            sys.exit(f"empty file: {path}")
+        spans = load_trace(path)
+        if not spans:
+            sys.exit(f"no spans in {path}")
+
+        summary = summarize(spans)
+        if args.json:
+            print(json.dumps(summary, indent=2, sort_keys=True))
+        else:
+            for line in render(summary, spans, args.slowest):
+                print(line)
+            if args.metrics:
+                mpath = Path(args.metrics)
+                if not mpath.is_file():
+                    sys.exit(f"no such file: {mpath}")
+                for line in render_metrics(mpath):
+                    print(line)
+
+    if args.flight:
+        for line in render_flight(read_flight_jsonl(args.flight),
+                                  args.steps_per_hour):
             print(line)
-        if args.metrics:
-            mpath = Path(args.metrics)
-            if not mpath.is_file():
-                sys.exit(f"no such file: {mpath}")
-            for line in render_metrics(mpath):
+
+    if args.profile:
+        ppath = Path(args.profile)
+        try:
+            doc = json.loads(ppath.read_text())
+        except (OSError, ValueError):
+            print(f"-- profiler: no readable profile at {ppath} --")
+            doc = None
+        if doc is not None:
+            for line in render_profile(doc):
                 print(line)
 
 

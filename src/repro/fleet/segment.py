@@ -34,6 +34,7 @@ stays eager numpy either way, so both backends emit the same events.
 """
 from __future__ import annotations
 
+import time
 import warnings
 
 import numpy as np
@@ -309,7 +310,7 @@ class SegmentFleet(VectorFleet):
                     li = li[load == load.min()]
                 chosen = int(li[np.argmin(self._name_rank[li])])
         tr = obs.TRACER
-        if tr.enabled:
+        if tr.enabled and not obs.FLIGHT.sampling:
             tr.instant("fleet.route",
                        tags={"rid": int(self.r_rid[j]),
                              "tenant": self.tenant_names[
@@ -359,10 +360,9 @@ class SegmentFleet(VectorFleet):
         self.r_queue_wait[js] += qw
         mx = obs.METRICS
         if mx.enabled:
-            h = mx.histogram("queue_wait_s",
-                             "meter-time queued before a slot")
-            for v in qw.tolist():
-                h.observe(v)
+            mx.histogram("queue_wait_s",
+                         "meter-time queued before a slot"
+                         ).observe_many(qw)
         if self._serve:
             w = self._w_pre[rows]
             ws = w * tickr
@@ -496,7 +496,9 @@ class SegmentFleet(VectorFleet):
             mx.gauge("active_nodes", "routable (ACTIVE) nodes").set(
                 int((self._state == _ACTIVE).sum()))
         if k == 1 and self.steps % self.plan.plan_every == 0:
+            t0 = time.perf_counter()
             self._plan()
+            self.profile.add("plan", time.perf_counter() - t0)
 
     def _book_gated(self, gi, kt) -> None:
         """Book ``kt[i]`` ticks of parked draw for gated nodes ``gi``
@@ -772,24 +774,41 @@ class SegmentFleet(VectorFleet):
         due = self.r_due
         idx = 0
         remaining = max_steps
+        clock = time.perf_counter
+        prof = self.profile
         while remaining > 0:
             if idx >= n_req and not self._has_work:
                 break
-            while idx < n_req and due[idx] <= self.steps:
-                self._submit(idx)
-                idx += 1
+            if idx < n_req and due[idx] <= self.steps:
+                t0 = clock()
+                n0 = idx
+                while idx < n_req and due[idx] <= self.steps:
+                    self._submit(idx)
+                    idx += 1
+                prof.add("dispatch", clock() - t0, idx - n0)
             nxt = self._next_event(idx, n_req)
             quiet = min(nxt - self.steps - 1, remaining)
             if quiet > 0:
+                t0 = clock()
                 self._advance(quiet)
+                prof.add("book", clock() - t0)
                 remaining -= quiet
-                continue
-            self._step()
-            remaining -= 1
+            else:
+                t0 = clock()
+                self._step()
+                prof.add("step", clock() - t0)
+                remaining -= 1
+            # snapshots ride the event walk: a row lands on the first
+            # boundary at/after each cadence mark, so recording never
+            # re-cuts a quiet stretch (the float account is untouched)
+            if self._flight is not None and self.steps >= self._next_snap:
+                self._flight_snapshot()
         still_gated = np.nonzero(self._gate_mark >= 0)[0]
         if still_gated.size:
             self._flush_gated(still_gated)
+        t0 = clock()
         self._acc.finalize()
+        prof.add("flush", clock() - t0)
         self._finalize()
         return sorted(int(self.r_rid[j]) for j in self._finished_idx)
 

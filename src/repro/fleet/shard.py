@@ -291,14 +291,18 @@ class ShardAccumulator:
                         pay[s][1] = (rows[sel] // w, wv[sel],
                                      dtv[sel], wsv[sel], kk[sel])
         infra = self.f._infra
+        prof = self.f.profile
+        clock = time.perf_counter
         for s in range(w):
             pd, pi = pay[s]
             if pd is None and pi is None:
                 continue
+            t0 = clock()
             if self.mode == "process":
                 self._conns[s].send(("batch", pd, pi))
             else:
                 _fold(self._parts[s], infra, pd, pi)
+            prof.add(f"flush.shard{s}", clock() - t0)
 
     # -- the finalize barrier ------------------------------------------
 
@@ -480,7 +484,8 @@ class ShardedSegmentFleet(SegmentFleet):
         fast path short-circuited (the forecaster EWMA inlined — same
         float ops as ``ArrivalForecaster.observe``)."""
         tr = obs.TRACER
-        if self.admission is not None or tr.enabled:
+        if self.admission is not None \
+                or (tr.enabled and not obs.FLIGHT.sampling):
             super()._submit(j)
             return
         self._n_arrivals += 1
@@ -505,14 +510,24 @@ class ShardedSegmentFleet(SegmentFleet):
         scalar path's, in the scalar path's order, so the placement
         sequence and the ledger are unchanged — this loop only removes
         Python dispatch overhead.  Any feature that needs per-arrival
-        hooks (admission, tracing, metrics, round-robin) falls back to
-        the per-arrival path."""
+        hooks (admission, unsampled tracing, round-robin) falls back
+        to the per-arrival path; metrics stay fused — every sub-batch
+        between slow checks shares one candidate set, so its per-route
+        ``routing_candidates`` observes collapse into one
+        ``observe_many`` carrying the scalar path's exact values."""
         tr = obs.TRACER
-        if self.admission is not None or tr.enabled \
-                or obs.METRICS.enabled or self._rr_router:
+        if self.admission is not None or self._rr_router \
+                or (tr.enabled and not obs.FLIGHT.sampling):
             for j in range(lo, hi):
                 self._submit(j)
             return
+        mx = obs.METRICS
+        h_cand = None
+        if mx.enabled:
+            from repro.fleet.scheduler import _CANDIDATE_BUCKETS
+            h_cand = mx.histogram("routing_candidates",
+                                  "nodes eligible per route",
+                                  buckets=_CANDIDATE_BUCKETS)
         self._n_arrivals += hi - lo
         fc = self.forecaster if self.plan is not None else None
         if fc is not None:
@@ -565,6 +580,10 @@ class ShardedSegmentFleet(SegmentFleet):
                 self._canary[i] = j
                 self._canary_step[i] = self.steps
                 self._masks_dirty = True
+                if h_cand is not None:
+                    # the scalar _route observes the healthy count for
+                    # a canary pick; keep the value stream in order
+                    h_cand.observe(self._m_healthy_cnt)
                 self._node_submit(i, j)
                 j += 1
                 continue
@@ -584,6 +603,7 @@ class ShardedSegmentFleet(SegmentFleet):
             clock = time.perf_counter
             route_s = 0.0
             dirty_s = -1
+            j0, cand_cnt = j, self._cand_cnt
             sh_cand = self._sh_cand
             slots_u = self._slots_u
             for j in range(j, hi):
@@ -645,6 +665,10 @@ class ShardedSegmentFleet(SegmentFleet):
             self.route_s += route_s
             if dirty_s >= 0:
                 wg[dirty_s] = -1
+            if h_cand is not None and j > j0:
+                # nothing in the fast loop touches the masks, so the
+                # scalar path would observe cand_cnt once per arrival
+                h_cand.observe_many([cand_cnt] * (j - j0))
         if ri:
             ia = np.asarray(ri, np.int64)
             ja = np.asarray(rj, np.int64)
@@ -800,7 +824,7 @@ class ShardedSegmentFleet(SegmentFleet):
                         wg[s] = gen
                 chosen = min(self._win)[3]
         tr = obs.TRACER
-        if tr.enabled:
+        if tr.enabled and not obs.FLIGHT.sampling:
             tr.instant("fleet.route",
                        tags={"rid": int(self.r_rid[j]),
                              "tenant": self.tenant_names[
@@ -962,6 +986,7 @@ class ShardedSegmentFleet(SegmentFleet):
             idx = 0                          # by VectorArrivals)
             remaining = max_steps
             clock = time.perf_counter
+            prof = self.profile
             while remaining > 0:
                 if idx >= n_req and not self._has_work:
                     break
@@ -971,20 +996,35 @@ class ShardedSegmentFleet(SegmentFleet):
                     if hi > idx:
                         t0 = clock()
                         self._submit_seq(idx, hi)
-                        self.dispatch_s += clock() - t0
+                        dt = clock() - t0
+                        self.dispatch_s += dt
+                        prof.add("dispatch", dt, hi - idx)
                         idx = hi
                 nxt = self._next_event(idx, n_req)
                 quiet = min(nxt - self.steps - 1, remaining)
                 if quiet > 0:
+                    t0 = clock()
                     self._advance(quiet)
+                    prof.add("book", clock() - t0)
                     remaining -= quiet
-                    continue
-                self._step()
-                remaining -= 1
+                else:
+                    t0 = clock()
+                    self._step()
+                    prof.add("step", clock() - t0)
+                    remaining -= 1
+                # snapshots ride the event walk (see SegmentFleet.run):
+                # rows land on event boundaries, never re-cutting a
+                # quiet stretch, so the account is untouched
+                if self._flight is not None \
+                        and self.steps >= self._next_snap:
+                    self._flight_snapshot()
             still_gated = np.nonzero(self._gate_mark >= 0)[0]
             if still_gated.size:
                 self._flush_gated(still_gated)
+            prof.add("route", self.route_s, int(self._n_arrivals))
+            t0 = clock()
             self._acc.finalize()
+            prof.add("flush", clock() - t0)
             self._finalize()
             return sorted(int(self.r_rid[j]) for j in self._finished_idx)
         finally:

@@ -80,6 +80,11 @@ _STATE_ORDER = {_ACTIVE: 0, _PROBATION: 0, _WAKING: 0, _GATED: 2}
 
 _NO_CAP = 1 << 62                   # max_seq sentinel: uncapped
 
+#: stand-in tracer for paths head sampling turns off (obs.FLIGHT
+#: sampling keeps the tracer live for finalize-built request trees but
+#: suppresses the per-arrival instants)
+_NULL_TRACER = obs.NullTracer()
+
 
 @dataclass(frozen=True)
 class VectorNodeSpec:
@@ -387,6 +392,8 @@ class VectorFleet:
         self._ledger_view = _TenantLedgerView(self)
         self._ran = False
         self._n_arrivals = 0
+        self.profile = obs.PhaseProfiler()          # engine self-profiler
+        self._flight = None
 
     # ------------------------------------------------------------------
     # energy model — op-for-op replicas of the reference arithmetic
@@ -557,7 +564,10 @@ class VectorFleet:
                 idxs = np.nonzero(tie)[0]
                 chosen = int(idxs[np.argmin(self._name_rank[idxs])])
         tr = obs.TRACER
-        if tr.enabled:
+        # head sampling thins the trace to request trees built at
+        # finalize; the per-arrival instants stay off so big-rung
+        # dispatch is not serialized through the tracer
+        if tr.enabled and not obs.FLIGHT.sampling:
             tr.instant("fleet.route",
                        tags={"rid": int(self.r_rid[j]),
                              "tenant": self.tenant_names[
@@ -589,6 +599,8 @@ class VectorFleet:
         if self.plan is not None:
             self.forecaster.observe(self.steps)
         tr = obs.TRACER
+        if obs.FLIGHT.sampling:
+            tr = _NULL_TRACER       # per-arrival instants sampled out
         tenant = self.tenant_names[int(self.r_tenant[j])]
         if self.admission is not None:
             view = _ReqView(int(self.r_rid[j]), tenant)
@@ -620,6 +632,7 @@ class VectorFleet:
         slot_req = self._slot_req[i]
         q = self._queues[i]
         mx = obs.METRICS
+        qws = [] if mx.enabled else None
         for s in range(len(slot_req)):
             if not q:
                 break
@@ -633,9 +646,8 @@ class VectorFleet:
             qw = max(float(self._meter_now[i]) - float(self.r_enq_t[j]),
                      0.0)
             self.r_queue_wait[j] += qw
-            if mx.enabled:
-                mx.histogram("queue_wait_s",
-                             "meter-time queued before a slot").observe(qw)
+            if qws is not None:
+                qws.append(qw)
             tix = int(self.r_tenant[j])
             if self._serve:
                 # prefill window: two TickClock calls bracket the
@@ -675,6 +687,12 @@ class VectorFleet:
             self.r_fill_cum[j] = self._decode_share_cum[i]
             self.r_finish_key[j] = key
             self._finish_at[i].setdefault(key, []).append(j)
+        if qws:
+            # one batched call per fill burst, bit-identical to the old
+            # per-slot observe loop (see Histogram.observe_many)
+            mx.histogram("queue_wait_s",
+                         "meter-time queued before a slot"
+                         ).observe_many(qws)
 
     def _finish(self, i: int, j: int) -> None:
         self.r_done_tokens[j] += self._busy_steps[i] - self.r_fill_busy[j]
@@ -1046,7 +1064,56 @@ class VectorFleet:
         self.r_fill_cum = np.zeros(n_req)
         self.r_finish_key = np.zeros(n_req, np.int64)
         self._finished_idx: list = []
+        self.profile = obs.PhaseProfiler()
+        self._flight_begin()
         return n_req
+
+    # -- flight recorder: time-series snapshots -----------------------
+
+    def _flight_begin(self) -> None:
+        """Arm the snapshot cadence when a live ``FlightRecorder`` with
+        ``snapshot_every > 0`` is installed; ``self._flight`` doubles as
+        the hot-loop guard (one ``is not None`` per iteration)."""
+        fl = obs.FLIGHT
+        self._flight = fl if (fl.enabled and fl.snapshot_every > 0) \
+            else None
+        self._next_snap = fl.snapshot_every if self._flight is not None \
+            else (1 << 62)
+        self._snap_arrivals_mark = 0
+
+    def _flight_snapshot(self) -> None:
+        """Record one flight-log row at the current fleet step.  All the
+        inputs are O(n) array reductions over state the engines keep
+        anyway, so a snapshot costs microseconds and never perturbs the
+        energy account."""
+        fl = self._flight
+        occ = np.minimum(self._occupied, self._slots)
+        w = self._occ_w[self._iota, occ]
+        if self.plan is not None:
+            active = int((self._state == _ACTIVE).sum())
+            w = np.where(self._state == _GATED,
+                         np.maximum(self._parked_w, 0.0), w)
+        else:
+            active = self.n - int(self._loop_parked.sum())
+        cum = float(self._phase_ws.sum())
+        gm = getattr(self, "_gate_mark", None)
+        if gm is not None:
+            # segment engines defer gated bookings to wake/finalize;
+            # fold the pending parked draw in so the curve stays smooth
+            live = gm >= 0
+            if live.any():
+                dtr = np.maximum(self._recent_dt(), 1e-9)
+                cum += float((np.maximum(self._parked_w, 0.0) * dtr
+                              * (self.steps - gm))[live].sum())
+        fl.record({"t": int(self.steps), "active_nodes": active,
+                   "aggregate_watts": float(w.sum()),
+                   "queue_depth": int(self._queued.sum()),
+                   "cumulative_ws": cum,
+                   "arrivals_in_window":
+                       int(self._n_arrivals - self._snap_arrivals_mark)})
+        self._snap_arrivals_mark = self._n_arrivals
+        while self._next_snap <= self.steps:
+            self._next_snap += fl.snapshot_every
 
     def run(self, arrivals, max_steps: int = 10_000,
             arrival_every: int = 1) -> list:
@@ -1063,6 +1130,8 @@ class VectorFleet:
                 self._submit(idx)
                 idx += 1
             self._step()
+            if self._flight is not None and self.steps >= self._next_snap:
+                self._flight_snapshot()
         self._finalize()
         return sorted(int(self.r_rid[j]) for j in self._finished_idx)
 
@@ -1091,22 +1160,85 @@ class VectorFleet:
         self.ledger = led
         tr = obs.TRACER
         if tr.enabled:
-            for i in booked:
-                i = int(i)
-                for p, phase in enumerate(PHASES):
-                    if self._cell_n[i, :, p].sum() == 0:
-                        continue
-                    ws = float(self._cell_ws[i, :, p].sum())
-                    s = float(self._cell_s[i, :, p].sum())
-                    tr.begin(f"vector.{phase}", node=self.names[i],
-                             t0=0.0, tags={"phase": phase, "ws": ws}
-                             ).finish(max(s, 0.0))
+            # one bulk append for the whole (node, phase) aggregate grid
+            # instead of one tracer call per span
+            n_np = self._cell_n.sum(axis=1)         # [n, 4]
+            ws_np = self._cell_ws.sum(axis=1)
+            s_np = self._cell_s.sum(axis=1)
+            ii, pp = np.nonzero(n_np > 0)           # row-major: node, phase
+            tr.add_spans([
+                obs.Span(name=f"vector.{PHASES[p]}", node=self.names[i],
+                         t0=0.0, t1=max(float(s_np[i, p]), 0.0),
+                         tags={"phase": PHASES[p],
+                               "ws": float(ws_np[i, p])})
+                for i, p in zip(ii.tolist(), pp.tolist())])
+            self._emit_sampled_requests(tr)
         mx = obs.METRICS
         if mx.enabled:
             mx.counter("fleet_steps_total", "fleet scheduler steps"
-                       ).inc(self.steps)
+                       ).add(self.steps)
             mx.counter("arrivals_total", "submits offered to the fleet"
-                       ).inc(self._n_arrivals)
+                       ).add(self._n_arrivals)
+        if self._flight is not None and \
+                (not self._flight.snapshots
+                 or self._flight.snapshots[-1]["t"] < self.steps):
+            self._flight_snapshot()     # close the curve at run end
+
+    def _emit_sampled_requests(self, tr) -> None:
+        """Emit ``serve.request`` span trees for the head-sampled slice
+        of routed requests, with exact per-request booked Ws as the
+        attribution weights, and note the per-request energy envelope
+        the sampled scale-up needs for its error bound."""
+        fl = obs.FLIGHT
+        if not fl.enabled or not self.tenant_names:
+            return
+        routed = self.r_node >= 0
+        req_ws = self.r_prefill_ws + self.r_decode_ws
+        if routed.any():
+            fl.note_population(int(routed.sum()),
+                               float(req_ws[routed].min()),
+                               float(req_ws[routed].max()))
+        else:
+            fl.note_population(0, 0.0, 0.0)
+        picked = np.nonzero(routed & fl.sample_mask(self.r_rid))[0]
+        if not picked.size:
+            return
+        roots, kids = [], []
+        for j in picked.tolist():
+            i = int(self.r_node[j])
+            node = self.names[i]
+            rid = int(self.r_rid[j])
+            tenant = self.tenant_names[int(self.r_tenant[j])]
+            tick = float(self._tick[i])
+            t0 = float(self.r_enq_t[j])
+            p0 = t0 + float(self.r_queue_wait[j])
+            p1 = p0 + tick              # serve-model prefill window
+            d1 = p1 + max(int(self.r_done_tokens[j]), 0) * tick
+            roots.append(obs.Span(
+                name="serve.request", node=node, t0=t0, t1=d1,
+                tags={"rid": rid, "tenant": tenant, "sampled": True}))
+            kids.append((j, node, rid, tenant, t0, p0, p1, d1))
+        stored_roots = tr.add_spans(roots)
+        batch = []
+        for root, (j, node, rid, tenant, t0, p0, p1, d1) in \
+                zip(roots, kids):
+            pid = root.span_id
+            batch.append(obs.Span(
+                name="serve.queue_wait", node=node, t0=t0, t1=p0,
+                parent_id=pid, tags={"rid": rid, "sampled": True}))
+            batch.append(obs.Span(
+                name="serve.prefill", node=node, t0=p0, t1=p1,
+                parent_id=pid,
+                tags={"rid": rid, "tenant": tenant, "phase": "prefill",
+                      "ws": float(self.r_prefill_ws[j]),
+                      "sampled": True}))
+            batch.append(obs.Span(
+                name="serve.decode", node=node, t0=p1, t1=d1,
+                parent_id=pid,
+                tags={"rid": rid, "tenant": tenant, "phase": "decode",
+                      "ws": float(self.r_decode_ws[j]),
+                      "sampled": True}))
+        fl.sampled_spans += stored_roots + tr.add_spans(batch)
 
     # ------------------------------------------------------------------
     # reporting
@@ -1153,6 +1285,8 @@ class VectorFleet:
                           "total_ws": float(self._node_ws[i])
                           if self.tenant_names else 0.0}
                          for i in range(self.n)]}
+        if self.profile.seconds:
+            doc["profile"] = self.profile.to_dict()
         if self.admission is not None:
             doc["admission"] = self.admission.summary(self._ledger_view)
         if self.plan is not None:

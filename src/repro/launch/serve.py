@@ -227,6 +227,34 @@ def run_vector(args) -> None:
         h = obs.METRICS.histogram("queue_wait_s")
         print("queue_wait_s " + " ".join(
             f"p{int(q * 100)}={h.quantile(q):.4f}s" for q in obs.QUANTILES))
+    fl = obs.FLIGHT
+    if fl.enabled:
+        if args.flight_log:
+            print(f"flight -> {fl.write_jsonl()} "
+                  f"({len(fl.snapshots)} snapshots)")
+        elif fl.snapshot_every > 0:
+            print(f"flight: {len(fl.snapshots)} snapshots "
+                  f"(pass --flight-log to persist)")
+        if fl.sampling and obs.TRACER.enabled:
+            sa = obs.attribute_joules_sampled(
+                list(obs.TRACER.spans), vec.ledger, fl.sample_rate,
+                population=fl.population)
+            if sa.scaled_ws is None:
+                print(f"flight sampled 0/{sa.total_requests} requests "
+                      f"(rate {fl.sample_rate:g}) — nothing to scale up")
+            else:
+                print(f"flight sampled {sa.sampled_requests}/"
+                      f"{sa.total_requests} requests "
+                      f"(rate {fl.sample_rate:g}): scaled "
+                      f"{sa.scaled_ws:.2f}Ws vs ledger "
+                      f"{sa.ledger_request_ws:.2f}Ws request-phase "
+                      f"(err {sa.error_ws:+.2f}Ws, bound "
+                      f"{sa.error_bound_ws:.2f}Ws) "
+                      f"{'ok' if sa.ok else 'OUT OF BOUND'}")
+    prof = summary.get("profile")
+    if prof:
+        for p, row in sorted(prof["phases"].items()):
+            print(f"profile {p}: {row['seconds']:.4f}s x{row['count']}")
 
 
 def main() -> None:
@@ -321,6 +349,21 @@ def main() -> None:
     ap.add_argument("--metrics-out", default=None,
                     help="enable the metrics registry; write the Prometheus "
                          "text exposition here")
+    ap.add_argument("--trace-sample", type=float, default=1.0,
+                    help="flight recorder: head-sample this fraction of "
+                         "request ids for full serve.request span trees "
+                         "(deterministic splitmix64 hash; < 1.0 also "
+                         "suppresses per-arrival route/submit instants so "
+                         "the fused dispatch path stays fused)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="flight recorder: record one fleet time-series "
+                         "row (watts, active nodes, queue depth, "
+                         "cumulative Ws, arrivals) every N simulated "
+                         "fleet steps (0 = off)")
+    ap.add_argument("--flight-log", default=None,
+                    help="persist the flight-recorder snapshot rows "
+                         "(JSONL) here, rendered offline via "
+                         "scripts/trace_report.py --flight")
     args = ap.parse_args()
 
     if args.engine != "object":
@@ -331,8 +374,20 @@ def main() -> None:
                 ap.error(f"{name} is object-engine only (per-node "
                          f"governors and power traces need the object "
                          f"loops) — drop it or use --engine object")
+    flight_on = args.trace_sample < 1.0 or args.snapshot_every > 0 \
+        or args.flight_log
+    if flight_on and args.engine == "object":
+        ap.error("--trace-sample/--snapshot-every/--flight-log ride the "
+                 "vectorized cores — pick --engine vector/vector-seg/"
+                 "vector-jax/vector-shard")
     if args.trace_spans or args.metrics_out:
         obs.enable()
+    if flight_on:
+        obs.set_flight(obs.FlightRecorder(sample_rate=args.trace_sample,
+                                          snapshot_every=args.snapshot_every,
+                                          log_path=args.flight_log))
+        if args.trace_sample < 1.0 and not obs.TRACER.enabled:
+            obs.enable()        # sampled trees need a live tracer
     if args.engine != "object":
         run_vector(args)
         return

@@ -21,28 +21,38 @@ serving hot path pays one attribute check per edge when tracing is off.
 (``write_chrome_trace``, ``write_spans_jsonl``) render what they
 collected.
 """
-from repro.obs.attribution import AttributionResult, attribute_joules
+from repro.obs.attribution import (AttributionResult, SampledAttribution,
+                                   attribute_joules,
+                                   attribute_joules_sampled)
 from repro.obs.export import (chrome_trace_events, read_chrome_trace,
                               read_spans_jsonl, write_chrome_trace,
                               write_spans_jsonl)
+from repro.obs.flight import (SNAPSHOT_FIELDS, FlightRecorder, NullFlight,
+                              PhaseProfiler, read_flight_jsonl)
 from repro.obs.metrics import (DEFAULT_BUCKETS, QUANTILES, Counter, Gauge,
                                Histogram, MetricsRegistry, NullMetrics)
 from repro.obs.span import FLEET_ROW, NullTracer, Span, Tracer
 
 __all__ = [
-    "AttributionResult", "attribute_joules",
+    "AttributionResult", "SampledAttribution", "attribute_joules",
+    "attribute_joules_sampled",
     "chrome_trace_events", "read_chrome_trace", "read_spans_jsonl",
     "write_chrome_trace", "write_spans_jsonl",
+    "SNAPSHOT_FIELDS", "FlightRecorder", "NullFlight", "PhaseProfiler",
+    "read_flight_jsonl",
     "DEFAULT_BUCKETS", "QUANTILES", "Counter", "Gauge", "Histogram",
     "MetricsRegistry", "NullMetrics",
     "FLEET_ROW", "NullTracer", "Span", "Tracer",
-    "TRACER", "METRICS", "set_tracer", "set_metrics", "enable", "disable",
+    "TRACER", "METRICS", "FLIGHT", "set_tracer", "set_metrics",
+    "set_flight", "enable", "disable",
 ]
 
 #: module-level instruments every call site reads (``obs.TRACER`` /
-#: ``obs.METRICS``); no-ops until ``enable()``/``set_*`` swap them
+#: ``obs.METRICS`` / ``obs.FLIGHT``); no-ops until ``enable()``/``set_*``
+#: swap them
 TRACER = NullTracer()
 METRICS = NullMetrics()
+FLIGHT = NullFlight()
 
 
 def set_tracer(tracer) -> "Tracer":
@@ -57,6 +67,14 @@ def set_metrics(metrics) -> "MetricsRegistry":
     return METRICS
 
 
+def set_flight(flight) -> "FlightRecorder":
+    """Install a live ``FlightRecorder`` (sampling + snapshots); ``None``
+    restores the no-op."""
+    global FLIGHT
+    FLIGHT = flight if flight is not None else NullFlight()
+    return FLIGHT
+
+
 def enable(clock=None, maxlen: int = 200_000):
     """Turn tracing + metrics on process-wide; returns the live pair."""
     kw = {"maxlen": maxlen} if clock is None else {"clock": clock,
@@ -69,3 +87,4 @@ def disable() -> None:
     check per edge)."""
     set_tracer(None)
     set_metrics(None)
+    set_flight(None)

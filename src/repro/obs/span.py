@@ -145,6 +145,26 @@ class Tracer:
             self._stack.pop()
             sp.finish(self.clock())
 
+    def add_spans(self, spans) -> int:
+        """Bulk append: assign ids and store a whole batch of caller-built
+        ``Span`` objects in one tracer call (the vectorized engines emit
+        per-(node, phase) aggregates and sampled request trees this way
+        instead of one ``begin`` per span).  Spans arriving with
+        ``span_id == 0`` get fresh ids; parent links set by the caller
+        are kept.  Returns how many were stored (the rest are counted in
+        ``dropped``)."""
+        stored = 0
+        for sp in spans:
+            if sp.span_id == 0:
+                sp.span_id = self._next_id
+                self._next_id += 1
+            if len(self.spans) < self.maxlen:
+                self.spans.append(sp)
+                stored += 1
+            else:
+                self.dropped += 1
+        return stored
+
     def to_jsonl(self, path) -> str:
         from repro.obs.export import write_spans_jsonl
         return write_spans_jsonl(self.spans, path)
@@ -168,6 +188,9 @@ class NullTracer:
 
     def instant(self, name: str, **kw) -> Span:
         return _NULL_SPAN
+
+    def add_spans(self, spans) -> int:
+        return 0
 
     @contextmanager
     def span(self, name: str, **kw):

@@ -1,0 +1,436 @@
+"""Flight recorder: batched ingestion, head sampling, snapshots,
+scale-up conservation, and the engine self-profiler.
+
+The contract the 10^7-arrival rungs lean on: turning the flight
+recorder on must not move a single ledger bit (sampling and snapshots
+read engine state, never steer it), ``observe_many`` must be
+bit-identical to the per-element loop it replaced, the head sampler
+must be deterministic and platform-stable, and the sampled-span
+scale-up must land inside the error bound it reports.
+"""
+import importlib.util
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.power import R740_ARRIA10
+from repro.fleet import (FleetPolicy, PowerPlanPolicy, PowerStatePolicy,
+                         SegmentFleet, VectorNodeSpec)
+from repro.fleet.shard import ShardedSegmentFleet
+from repro.obs import (SNAPSHOT_FIELDS, Counter, FlightRecorder, Histogram,
+                       MetricsRegistry, PhaseProfiler, Span, Tracer,
+                       read_flight_jsonl)
+from repro.obs.flight import _hash64
+from repro.serve.engine import Request
+from repro.telemetry import node_envelope
+
+SCRIPTS = Path(__file__).resolve().parents[1] / "scripts"
+TICK = 0.004
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    obs.disable()
+    yield
+    obs.disable()
+
+
+# ---------------------------------------------------------------------------
+# Batched ingestion: observe_many / Counter.add / Tracer.add_spans
+# ---------------------------------------------------------------------------
+
+def test_observe_many_bit_identical_to_looped_observe():
+    """The satellite regression: one array call must reproduce the
+    per-element loop bit for bit — bucket counts, the float ``sum``
+    (same left-to-right accumulation order), and the quantiles."""
+    rng = np.random.default_rng(7)
+    values = np.concatenate([
+        rng.exponential(0.3, 200),
+        np.array([0.0, 0.001, 0.001, 5.0, 1e9, -1.0]),  # edges + outliers
+        np.array([0.005, 0.025, 0.1, 1.0]),             # exactly on bounds
+    ])
+    looped, batched = Histogram("qw"), Histogram("qw")
+    for v in values:
+        looped.observe(float(v))
+    batched.observe_many(values)
+    assert batched.counts == looped.counts
+    assert batched.sum == looped.sum            # bitwise, not approx
+    assert batched.count == looped.count
+    assert batched.to_dict() == looped.to_dict()
+    for q in (0.5, 0.9, 0.99):
+        assert batched.quantile(q) == looped.quantile(q)
+
+
+def test_observe_many_chunked_matches_one_loop():
+    """Per-segment batches (the engines' call shape) accumulate in the
+    same order as one long loop, so chunking cannot move the sum."""
+    values = np.linspace(0.0, 2.0, 101) ** 3
+    looped, chunked = Histogram("x"), Histogram("x")
+    for v in values:
+        looped.observe(float(v))
+    for lo in range(0, values.size, 13):
+        chunked.observe_many(values[lo:lo + 13])
+    assert chunked.counts == looped.counts and chunked.sum == looped.sum
+
+
+def test_observe_many_accepts_empty_and_lists():
+    h = Histogram("x")
+    h.observe_many(np.array([]))
+    h.observe_many([])
+    assert h.count == 0 and h.sum == 0.0
+    h.observe_many([3.0] * 4)
+    assert h.count == 4 and h.sum == 12.0
+
+
+def test_counter_add_folds_a_window():
+    c = Counter("routed")
+    c.add(17)
+    c.add(np.int64(3))
+    assert c.value == 20.0
+    with pytest.raises(ValueError):
+        c.add(-1)
+
+
+def test_tracer_add_spans_bulk_append_caps_and_counts_drops():
+    tr = Tracer(maxlen=3)
+    batch = [Span(name=f"s{i}", node="n0", t0=float(i), t1=float(i) + 1.0)
+             for i in range(5)]
+    stored = tr.add_spans(batch)
+    assert stored == 3 and len(tr.spans) == 3 and tr.dropped == 2
+    assert all(sp.span_id is not None for sp in tr.spans)
+    assert obs.NullTracer().add_spans(batch) == 0
+
+
+# ---------------------------------------------------------------------------
+# Head sampler: deterministic, platform-stable, vectorized == scalar
+# ---------------------------------------------------------------------------
+
+def test_sampler_rate_edges_and_validation():
+    none = FlightRecorder(sample_rate=0.0)
+    every = FlightRecorder(sample_rate=1.0)
+    rids = np.arange(512, dtype=np.int64)
+    assert not any(none.sampled(r) for r in range(512))
+    assert all(every.sampled(r) for r in range(512))
+    assert not none.sample_mask(rids).any()
+    assert every.sample_mask(rids).all()
+    assert none.sampling and not every.sampling
+    with pytest.raises(ValueError):
+        FlightRecorder(sample_rate=1.5)
+    with pytest.raises(ValueError):
+        FlightRecorder(sample_rate=-0.1)
+
+
+def test_sampler_scalar_matches_vectorized_mask():
+    rng = np.random.default_rng(11)
+    rids = rng.integers(0, 2**62, size=2000)
+    for rate in (1e-3, 0.1, 0.5, 0.9):
+        fl = FlightRecorder(sample_rate=rate)
+        mask = fl.sample_mask(rids)
+        assert mask.tolist() == [fl.sampled(int(r)) for r in rids]
+
+
+def test_sampler_is_deterministic_and_monotone_in_rate():
+    rids = range(4000)
+    lo = {r for r in rids if FlightRecorder(sample_rate=0.05).sampled(r)}
+    hi = {r for r in rids if FlightRecorder(sample_rate=0.5).sampled(r)}
+    assert lo and lo < hi          # head sampling: lower rate nests in higher
+    again = {r for r in rids if FlightRecorder(sample_rate=0.05).sampled(r)}
+    assert lo == again             # no RNG state anywhere
+    # splitmix64 reference values pin the platform-stable contract
+    assert _hash64(0) == 0xE220A8397B1DCDAF
+    assert _hash64(1) == 0x910A2DEC89025CC1
+
+
+# ---------------------------------------------------------------------------
+# PhaseProfiler + flight log round-trip
+# ---------------------------------------------------------------------------
+
+def test_phase_profiler_add_merge_to_dict():
+    a, b = PhaseProfiler(), PhaseProfiler()
+    a.add("dispatch", 0.5, 10)
+    a.add("dispatch", 0.25, 5)
+    b.add("dispatch", 1.0, 1)
+    b.add("route", 0.125, 7)
+    a.merge(b)
+    doc = a.to_dict()
+    assert doc["phases"]["dispatch"] == {"seconds": 1.75, "count": 16}
+    assert doc["phases"]["route"] == {"seconds": 0.125, "count": 7}
+
+
+def test_flight_log_roundtrip_tolerates_truncation(tmp_path):
+    fl = FlightRecorder(snapshot_every=5)
+    fl.record({"t": 5, "aggregate_watts": 12.0})
+    fl.record({"t": 10, "aggregate_watts": 9.0})
+    path = fl.write_jsonl(tmp_path / "flight.jsonl")
+    assert read_flight_jsonl(path) == fl.snapshots
+    # a killed run truncates mid-line: the valid prefix still reads back
+    Path(path).write_text(json.dumps(fl.snapshots[0]) + '\n{"t": 10, "ag')
+    assert read_flight_jsonl(path) == [fl.snapshots[0]]
+    assert read_flight_jsonl(tmp_path / "never-written.jsonl") == []
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: flight on == flight off, bit for bit
+# ---------------------------------------------------------------------------
+
+def _script():
+    """Bursts around a trough: quiet stretches (segments + snapshots on
+    boundaries), gates, and re-admission wakes."""
+    dues = (list(range(1, 7)) + list(range(120, 138, 3))
+            + [200 + k // 3 for k in range(18)])
+    return [(due, Request(rid=rid, prompt=np.full(5, 2, np.int32),
+                          max_new=3 + rid % 4, tenant=f"team{rid % 2}"))
+            for rid, due in enumerate(dues)]
+
+
+def _make(cls, n_nodes=3, slots=2, **kw):
+    policy = FleetPolicy(flush_every=4, checkpoint_every=8,
+                         router="energy", migrate_on_drift=False)
+    ppol = PowerPlanPolicy(
+        mode="gate", slo_queue_depth=4.0, plan_every=4, min_active=1,
+        min_active_steps=20, horizon_steps=32.0,
+        states=PowerStatePolicy(gate_watts=3.0, boot_energy_ws=2.0,
+                                warmup_steps=4, cooldown_steps=8))
+    env = node_envelope(R740_ARRIA10)
+    specs = [VectorNodeSpec(f"n{i}", env, slots=slots, step_s=TICK)
+             for i in range(n_nodes)]
+    return cls(specs, policy=policy, plan=ppol, loop_model="serve", **kw)
+
+
+def _state(fleet, finished):
+    cells = {k: (v.ws, v.seconds, v.count)
+             for k, v in fleet.ledger.cells.items()}
+    events = [(e.step, e.node, e.action, tuple(e.moved_rids))
+              for e in fleet.events]
+    return cells, events, finished, fleet.total_ws
+
+
+@pytest.mark.parametrize("engine", ["seg", "shard"])
+def test_flight_recorder_does_not_move_the_ledger(engine):
+    def build():
+        if engine == "seg":
+            return _make(SegmentFleet, backend="numpy")
+        return _make(ShardedSegmentFleet, shards=2, parallel="inline")
+
+    obs.disable()
+    off = build()
+    base = _state(off, off.run(_script(), max_steps=3000))
+
+    obs.set_tracer(Tracer())
+    fl = obs.set_flight(FlightRecorder(sample_rate=0.3, snapshot_every=10))
+    on = build()
+    got = _state(on, on.run(_script(), max_steps=3000))
+    assert got == base                       # bit-identical, not approx
+
+    rows = fl.snapshots
+    assert rows and all(set(SNAPSHOT_FIELDS) <= set(r) for r in rows)
+    ts = [r["t"] for r in rows]
+    assert ts == sorted(ts) and len(set(ts)) == len(ts)
+    assert sum(r["arrivals_in_window"] for r in rows) <= len(_script())
+    cum = [r["cumulative_ws"] for r in rows]
+    assert all(b >= a for a, b in zip(cum, cum[1:]))
+    assert 0.0 < cum[-1] <= on.total_ws * (1 + 1e-9)
+    assert rows[-1]["t"] == on.steps         # trailing row closes the curve
+
+    prof = on.summary()["profile"]["phases"]
+    assert {"dispatch", "book", "flush"} <= set(prof)
+    if engine == "shard":
+        # the shard driver splits route out of dispatch and times each
+        # shard's flush leg separately
+        assert {"route", "flush.shard0", "flush.shard1"} <= set(prof)
+    assert all(row["count"] >= 0 and row["seconds"] >= 0.0
+               for row in prof.values())
+
+
+def test_shard_fused_metrics_match_segment_scalar_stream():
+    """With metrics on (no tracer), the shard fast loop batches its
+    ``routing_candidates``/``queue_wait_s`` observations — the merged
+    histograms must be bit-identical to the segment engine's scalar
+    stream, and the ledger must stay bit-exact."""
+    def run(cls, **kw):
+        mx = obs.set_metrics(MetricsRegistry())
+        fleet = _make(cls, **kw)
+        fin = fleet.run(_script(), max_steps=3000)
+        obs.disable()
+        return _state(fleet, fin), mx
+
+    base, mx_seg = run(SegmentFleet, backend="numpy")
+    got, mx_shard = run(ShardedSegmentFleet, shards=2, parallel="inline")
+    assert got == base
+    for name in ("routing_candidates", "queue_wait_s"):
+        a, b = mx_seg.histogram(name), mx_shard.histogram(name)
+        assert a.count > 0, name
+        assert b.to_dict() == a.to_dict(), name
+        assert b.sum == a.sum, name
+
+
+def test_sampled_tracing_emits_trees_and_scale_up_is_bounded():
+    obs.set_tracer(Tracer())
+    fl = obs.set_flight(FlightRecorder(sample_rate=0.5))
+    fleet = _make(SegmentFleet, backend="numpy")
+    fleet.run(_script(), max_steps=3000)
+    spans = list(obs.TRACER.spans)
+    assert fl.sampled_spans > 0
+    sampled = [sp for sp in spans if sp.tags.get("sampled")]
+    assert sampled and {sp.name for sp in sampled} >= {"serve.request"}
+    assert fl.population and fl.population["count"] == len(_script())
+    sa = obs.attribute_joules_sampled(spans, fleet.ledger, 0.5,
+                                      population=fl.population)
+    assert sa.ok is True
+    assert abs(sa.error_ws) <= sa.error_bound_ws + 1e-9
+    # per-node conservation holds at any rate: un-sampled energy lands
+    # on synthesized filler spans
+    assert all(r["ok"] for r in sa.result.conservation(fleet.ledger).values())
+
+
+# ---------------------------------------------------------------------------
+# Property: scale-up lands in its bound for any rate; rate 1.0 is exact
+# ---------------------------------------------------------------------------
+
+def test_sampled_scaleup_property_any_rate_and_script():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    script_raw = st.lists(
+        st.tuples(st.integers(min_value=0, max_value=80),   # due step
+                  st.integers(min_value=0, max_value=2),    # tenant
+                  st.integers(min_value=1, max_value=6)),   # max_new
+        min_size=1, max_size=20)
+    rates = st.one_of(st.just(0.0), st.just(1.0),
+                      st.floats(min_value=0.0, max_value=1.0,
+                                allow_nan=False))
+
+    @settings(max_examples=25, deadline=None)
+    @given(raw=script_raw, rate=rates)
+    def check(raw, rate):
+        script = [(due, Request(rid=rid, prompt=np.full(3, 2, np.int32),
+                                max_new=mn, tenant=f"team{t}"))
+                  for rid, (due, t, mn) in enumerate(raw)]
+        obs.set_tracer(Tracer())
+        fl = obs.set_flight(FlightRecorder(sample_rate=rate))
+        try:
+            fleet = _make(SegmentFleet, n_nodes=2, backend="numpy")
+            fleet.run(script, max_steps=2000)
+            spans = list(obs.TRACER.spans)
+            sa = obs.attribute_joules_sampled(spans, fleet.ledger, rate,
+                                              population=fl.population)
+        finally:
+            obs.disable()
+        assert sa.ok is not False
+        if sa.error_bound_ws is not None and sa.error_ws is not None:
+            slack = 1e-9 * max(sa.ledger_request_ws, 1.0)
+            assert abs(sa.error_ws) <= sa.error_bound_ws + slack
+        rows = sa.result.conservation(fleet.ledger)
+        assert all(r["ok"] for r in rows.values())
+        if rate == 1.0:
+            # the sample is the population: scale-up reproduces the
+            # ledger's request-phase rollup to float-sum noise
+            assert sa.sampled_requests == sa.total_requests
+            assert sa.error_ws == pytest.approx(
+                0.0, abs=1e-6 * max(sa.ledger_request_ws, 1.0))
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# trace_report --flight / --profile: renders, never tracebacks
+# ---------------------------------------------------------------------------
+
+def _report(*argv):
+    return subprocess.run(
+        [sys.executable, str(SCRIPTS / "trace_report.py")] + list(argv),
+        capture_output=True, text=True)
+
+
+def test_trace_report_flight_renders_engine_log(tmp_path):
+    obs.set_flight(FlightRecorder(snapshot_every=10))
+    fleet = _make(SegmentFleet, backend="numpy")
+    fleet.run(_script(), max_steps=3000)
+    path = obs.FLIGHT.write_jsonl(tmp_path / "flight.jsonl")
+    obs.disable()
+    r = _report("--flight", path, "--steps-per-hour", "50")
+    assert r.returncode == 0, r.stderr
+    assert "flight log:" in r.stdout and "mean_W" in r.stdout
+
+
+def test_trace_report_flight_exits_zero_on_missing_empty_truncated(tmp_path):
+    r = _report("--flight", str(tmp_path / "nope.jsonl"))
+    assert r.returncode == 0 and "no snapshot rows" in r.stdout
+    empty = tmp_path / "empty.jsonl"
+    empty.write_text("")
+    r = _report("--flight", str(empty))
+    assert r.returncode == 0 and "no snapshot rows" in r.stdout
+    cut = tmp_path / "cut.jsonl"
+    cut.write_text('{"t": 3600, "aggregate_watts": 7.5, "active_nodes": 2,'
+                   ' "queue_depth": 0, "cumulative_ws": 10.0,'
+                   ' "arrivals_in_window": 4}\n{"t": 72')
+    r = _report("--flight", str(cut))
+    assert r.returncode == 0 and "1 snapshots" in r.stdout
+
+
+def test_trace_report_profile_table_and_unreadable_notice(tmp_path):
+    prof = tmp_path / "prof.json"
+    prof.write_text(json.dumps({
+        "arms": [{"shards": 2, "profile": {"phases": {
+            "dispatch": {"seconds": 2.0, "count": 100},
+            "route": {"seconds": 1.5, "count": 100}}}}]}))
+    r = _report("--profile", str(prof))
+    assert r.returncode == 0
+    assert "engine profile [shards=2]" in r.stdout
+    assert "dispatch" in r.stdout and "route" in r.stdout
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    r = _report("--profile", str(bad))
+    assert r.returncode == 0 and "no readable profile" in r.stdout
+    r = _report()
+    assert r.returncode != 0      # nothing to render is still an error
+
+
+# ---------------------------------------------------------------------------
+# perf_gate reads the self-profiler counters
+# ---------------------------------------------------------------------------
+
+def _perf_gate():
+    spec = importlib.util.spec_from_file_location(
+        "perf_gate", SCRIPTS / "perf_gate.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_perf_gate_prefers_profile_counters_over_flat_fields():
+    pg = _perf_gate()
+    arm = {"dispatch_s": 9.0, "route_s": 9.0,
+           "profile": {"phases": {"dispatch": {"seconds": 2.0, "count": 5},
+                                  "route": {"seconds": 1.0, "count": 5}}}}
+    assert pg.arm_phase_seconds(arm) == (2.0, 1.0, "profile")
+    assert pg.arm_phase_seconds({"dispatch_s": 3.0, "route_s": 1.0}) == \
+        (3.0, 1.0, "flat")
+    assert pg.arm_phase_seconds({})[:2] == (None, None)
+
+
+def test_perf_gate_profile_pass_fails_only_on_inconsistent_counters(capsys):
+    pg = _perf_gate()
+
+    def doc(curve):
+        return {"workload": "fleet_scale", "diurnal_10m": {"curve": curve}}
+
+    ok = doc([{"shards": 1, "profile": {"phases": {
+        "dispatch": {"seconds": 4.0, "count": 10},
+        "route": {"seconds": 3.0, "count": 10}}}}])
+    assert pg.gate_profile(ok) == 0
+    assert "measured dispatch floor" in capsys.readouterr().out
+
+    lying = doc([{"shards": 2, "profile": {"phases": {
+        "dispatch": {"seconds": 1.0, "count": 10},
+        "route": {"seconds": 2.0, "count": 10}}}}])
+    assert pg.gate_profile(lying) == 1
+    assert "inconsistent" in capsys.readouterr().out
+
+    assert pg.gate_profile(doc([{"shards": 1}])) == 0   # no counters: SKIP
+    assert "SKIP" in capsys.readouterr().out
